@@ -1,0 +1,51 @@
+"""Paper Fig 6/7: bitplane encode/decode throughput across parallelization
+designs (locality / shuffle / register_block) and register_block unroll
+variants (naive vs butterfly = the shuffle-instruction sweep analogue).
+
+Wall-clock numbers here are the jitted pure-jnp formulation on CPU (the
+container has no TPU); the *design ordering* claim is additionally checked
+structurally: tests assert bit-exact portability, and the Pallas kernels
+carry the VMEM-tiled TPU versions validated in interpret mode.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timeit, row
+from repro.kernels import ops, ref
+
+
+def run(sizes=(1 << 20, 1 << 22)) -> list:
+    lines = []
+    rng = np.random.default_rng(0)
+    for n in sizes:
+        mag = jnp.asarray(rng.integers(0, 2 ** 23, n).astype(np.uint32))
+        mb = n * 4 / 1e6
+        for design in ["locality", "shuffle", "register_block"]:
+            enc = jax.jit(lambda m: ops.encode_bitplanes(m, 23, design))
+            planes = enc(mag)
+            t = timeit(lambda: jax.block_until_ready(enc(mag)))
+            lines.append(row(f"bitplane_encode_{design}_{n}", t,
+                             f"{mb / 1e3 / t:.3f}GBps"))
+            dec = jax.jit(lambda p: ops.decode_bitplanes(p, 23, n, design))
+            dec(planes)
+            t = timeit(lambda: jax.block_until_ready(dec(planes)))
+            lines.append(row(f"bitplane_decode_{design}_{n}", t,
+                             f"{mb / 1e3 / t:.3f}GBps"))
+    # register_block unroll variants through the Pallas kernel body
+    # (interpret mode on CPU: correctness + instruction-count story)
+    n = 1 << 18
+    mag = jnp.asarray(rng.integers(0, 2 ** 23, n).astype(np.uint32))
+    for unroll in ["naive", "butterfly"]:
+        enc = jax.jit(lambda m: ops.encode_bitplanes(
+            m, 23, "register_block", backend="pallas_interpret", unroll=unroll))
+        t = timeit(lambda: jax.block_until_ready(enc(mag)), warmup=1, iters=1)
+        lines.append(row(f"bitplane_pallas_interp_{unroll}_{n}", t,
+                         f"{n * 4 / 1e9 / t:.4f}GBps"))
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

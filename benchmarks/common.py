@@ -1,0 +1,22 @@
+"""Shared benchmark utilities: timing, CSV rows."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List
+
+
+def timeit(fn: Callable, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall seconds per call."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[(len(ts) - 1) // 2]  # lower median: 2 iters -> the warm one
+
+
+def row(name: str, seconds: float, derived: str) -> str:
+    return f"{name},{seconds * 1e6:.1f},{derived}"

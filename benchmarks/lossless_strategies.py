@@ -1,0 +1,49 @@
+"""Paper Fig 8: Huffman-always vs RLE-always vs Hybrid-rc{1,2,4}:
+(de)compression throughput + incremental retrieval size vs the Huffman
+baseline, measured over the bitplanes of a NYX-proxy variable."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import timeit, row
+from repro.core import lossless as ll
+from repro.core import refactor as rf
+from repro.core import retrieve as rt
+from repro.data.fields import gaussian_field
+
+
+def run(shape=(64, 64, 64)) -> list:
+    lines = []
+    x = gaussian_field(shape, slope=-1.8, seed=5)   # NYX-like slope
+    nbytes = x.nbytes
+    variants = {
+        "huffman": ll.HybridConfig(force="huffman"),
+        "rle": ll.HybridConfig(force="rle"),
+        "hybrid_rc1": ll.HybridConfig(cr_threshold=1.0),
+        "hybrid_rc2": ll.HybridConfig(cr_threshold=2.0),
+        "hybrid_rc4": ll.HybridConfig(cr_threshold=4.0),
+    }
+    retr = {}
+    for name, cfg in variants.items():
+        r = rf.refactor_array(x, name, hybrid=cfg)   # warm compile
+        t = timeit(lambda: rf.refactor_array(x, name, hybrid=cfg),
+                   warmup=0, iters=2)
+        lines.append(row(f"lossless_compress_{name}", t,
+                         f"{nbytes / 1e9 / t:.4f}GBps;stored={r.stored_bytes}"))
+        reader = rt.ProgressiveReader(r)
+        t = timeit(lambda: rt.ProgressiveReader(r).retrieve(1e-4),
+                   warmup=1, iters=2)
+        _, _, _ = reader.retrieve(1e-4)
+        retr[name] = reader.total_bytes_fetched
+        lines.append(row(f"lossless_decompress_{name}", t,
+                         f"{nbytes / 1e9 / t:.4f}GBps;"
+                         f"fetched={reader.total_bytes_fetched}"))
+    base = retr["huffman"]
+    for name, b in retr.items():
+        lines.append(row(f"lossless_retrieval_overhead_{name}", 0.0,
+                         f"+{100 * (b - base) / base:.1f}%_vs_huffman"))
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,56 @@
+"""Paper Tables 2/3 + Figs 12/13/14: QoI-controlled progressive retrieval.
+
+* Tables 2/3: bitrates of CP / MA / MAPE(c=2) / MAPE(c=10) across requested
+  V_total tolerances, on NYX-proxy and mini-JHTDB-proxy velocity fields.
+* Fig 12/14: retrieval kernel throughput per method (and multi-device).
+* Fig 13: guarantee chain  actual <= estimated <= requested.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import row
+from repro.core import qoi as qq
+from repro.core import refactor as rf
+from repro.core import retrieve as rt
+from repro.data.fields import velocity_field
+
+TAUS = [1e-1, 5e-2, 1e-2, 5e-3, 1e-3, 5e-4, 1e-4, 5e-5]
+METHODS = [("cp", {}), ("ma", {}), ("mape_c2", {"c": 2.0}),
+           ("mape_c10", {"c": 10.0})]
+
+
+def _refs(shape, seed, slope):
+    vs = list(velocity_field(shape, seed=seed, slope=slope))
+    return vs, [rf.refactor_array(v, f"v{i}") for i, v in enumerate(vs)]
+
+
+def run(shape=(40, 40, 40)) -> list:
+    lines = []
+    for ds_name, slope, seed in [("nyx", -1.8, 21), ("jhtdb", -5 / 3, 22)]:
+        vs, refs = _refs(shape, seed, slope)
+        truth = sum(v ** 2 for v in vs)
+        for mname, kw in METHODS:
+            method = "mape" if mname.startswith("mape") else mname
+            for tau in TAUS:
+                readers = [rt.ProgressiveReader(r) for r in refs]
+                t0 = time.perf_counter()
+                res = qq.progressive_qoi_retrieve(readers, qq.V_TOTAL, tau,
+                                                  method=method, **kw)
+                dt = time.perf_counter() - t0
+                actual = float(np.abs(sum(v ** 2 for v in res.values)
+                                      - truth).max())
+                ok = actual <= res.tau_estimated <= tau
+                lines.append(row(
+                    f"qoi_{ds_name}_{mname}_{tau:.0e}", dt,
+                    f"bitrate={res.bitrate:.2f};iters={res.iterations};"
+                    f"tput={3 * vs[0].nbytes / 1e9 / dt:.4f}GBps;"
+                    f"guarantee={'OK' if ok else 'VIOLATED'};"
+                    f"actual={actual:.2e};est={res.tau_estimated:.2e}"))
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

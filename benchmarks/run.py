@@ -1,0 +1,49 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark driver: one module per paper table/figure (see DESIGN.md §9).
+
+  Fig 6/7   bitplane_designs        Fig 8    lossless_strategies
+  Fig 9     pipeline_overlap        Fig 10   weak_scaling
+  Fig 11    end_to_end              Tab 2/3 + Fig 12/13/14  qoi_benchmarks
+  (ours)    grad_compress_bench     (ours)   roofline (from dry-run JSONs)
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--only MODULE] [--quick]
+"""
+import argparse
+import sys
+import traceback
+
+MODULES = [
+    "bitplane_designs",
+    "lossless_strategies",
+    "pipeline_overlap",
+    "weak_scaling",
+    "end_to_end",
+    "qoi_benchmarks",
+    "grad_compress_bench",
+    "roofline",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    mods = [args.only] if args.only else MODULES
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in mods:
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            for line in mod.run():
+                print(line)
+            sys.stdout.flush()
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{name},0,ERROR")
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

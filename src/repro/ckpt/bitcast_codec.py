@@ -1,0 +1,173 @@
+"""Exact progressive codec for checkpoint tensors: IEEE-bitplane refactoring.
+
+Weights are bitcast to their integer bit patterns and bitplane-encoded
+MSB-first (sign, exponent, mantissa).  A *prefix* of planes is a valid
+truncated-mantissa approximation with bounded RELATIVE error; the FULL set of
+planes restores the tensor BIT-EXACTLY — which is what training resume needs,
+while evaluation/serving restores can stop early:
+
+  planes_kept >= 1 + n_exp + k   ->   relative error <= 2^-k
+  (fp32: n_exp=8, 23 mantissa planes; bf16: n_exp=8, 7 mantissa planes)
+
+Sign+exponent planes are always fetched together (min prefix 1+n_exp): a
+truncated exponent would not be an approximation at all.  Plane groups are
+compressed with the paper's Algorithm-2 hybrid codec — exponent planes are
+highly redundant across a weight tensor (Huffman), low mantissa planes are
+noise (Direct Copy), which is exactly the distribution the hybrid targets.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lossless as ll
+from repro.kernels import ops as kops
+
+_FMT = {
+    "float32": dict(bits=32, n_exp=8, view=np.uint32),
+    "bfloat16": dict(bits=16, n_exp=8, view=np.uint16),
+    "float16": dict(bits=16, n_exp=5, view=np.uint16),
+    "int32": dict(bits=32, n_exp=31, view=np.uint32),  # exact only
+    # fp64 (Miranda): 64 planes as two uint32 limbs — the hi limb
+    # (sign+11exp+20 mantissa) is the progressive prefix, the lo limb is the
+    # exact tail fetched only for bit-exact restores / rel < 2^-20
+    "float64": dict(bits=64, n_exp=11, view=np.uint64),
+}
+
+
+@dataclasses.dataclass
+class ExactRefactored:
+    dtype: str
+    shape: Tuple[int, ...]
+    n_bits: int
+    n_exp: int
+    group_planes: List[int]
+    groups: List[ll.Segment]
+
+    @property
+    def stored_bytes(self) -> int:
+        return sum(g.stored_bytes for g in self.groups)
+
+    def min_planes(self) -> int:
+        return 1 + self.n_exp
+
+    def planes_for_rel_error(self, rel: Optional[float]) -> int:
+        if rel is None or rel <= 0:
+            return self.n_bits
+        k = max(int(np.ceil(-np.log2(rel))), 0)
+        return min(self.min_planes() + k, self.n_bits)
+
+
+def exact_refactor(x: np.ndarray, hybrid: ll.HybridConfig = ll.HybridConfig(),
+                   design: str = "register_block", backend: str = "auto"
+                   ) -> ExactRefactored:
+    dt = str(x.dtype)
+    fmt = _FMT[dt]
+    bits = fmt["bits"]
+    raw64 = np.asarray(x).reshape(-1).view(fmt["view"])
+    if bits == 64:
+        hi = (raw64 >> np.uint64(32)).astype(np.uint32)
+        lo = (raw64 & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+        p_hi = np.asarray(kops.encode_bitplanes(jnp.asarray(hi), 32, design,
+                                                backend=backend))
+        p_lo = np.asarray(kops.encode_bitplanes(jnp.asarray(lo), 32, design,
+                                                backend=backend))
+        planes = np.concatenate([p_hi, p_lo], axis=0)
+    else:
+        raw = raw64.astype(np.uint32)
+        planes = np.asarray(kops.encode_bitplanes(jnp.asarray(raw), bits,
+                                                  design, backend=backend))
+    group_planes: List[int] = []
+    left = bits
+    while left:
+        g = min(hybrid.group_size, left)
+        group_planes.append(g)
+        left -= g
+    groups = []
+    row = 0
+    for g in group_planes:
+        blob = planes[row:row + g].reshape(-1).view(np.uint8)
+        seg = ll.compress_group(blob, hybrid)
+        seg.meta["n_planes"] = g
+        seg.meta["n_words"] = planes.shape[1]
+        groups.append(seg)
+        row += g
+    return ExactRefactored(dtype=dt, shape=tuple(x.shape), n_bits=bits,
+                           n_exp=fmt["n_exp"], group_planes=group_planes,
+                           groups=groups)
+
+
+def exact_retrieve(r: ExactRefactored, rel_error: Optional[float] = None,
+                   design: str = "register_block", backend: str = "auto"
+                   ) -> Tuple[np.ndarray, int]:
+    """Reconstruct to <= rel_error (None = bit-exact).  Returns (arr, bytes_read)."""
+    want = max(r.planes_for_rel_error(rel_error), r.min_planes())
+    rows, got, nbytes = [], 0, 0
+    for g, seg in zip(r.group_planes, r.groups):
+        if got >= want:
+            break
+        w = seg.meta["n_words"]
+        rows.append(ll.decompress_group(seg).view(np.uint32).reshape(-1, w))
+        nbytes += seg.stored_bytes
+        got += g
+    planes = np.concatenate(rows, axis=0)
+    n = int(np.prod(r.shape)) if r.shape else 1
+    fmt = _FMT[r.dtype]
+    if r.n_bits == 64:
+        p = planes.shape[0]
+        hi = np.asarray(kops.decode_bitplanes(jnp.asarray(planes[:min(p, 32)]),
+                                              32, n, design, backend=backend))
+        if p > 32:
+            lo = np.asarray(kops.decode_bitplanes(jnp.asarray(planes[32:]),
+                                                  32, n, design,
+                                                  backend=backend))
+        else:
+            lo = np.zeros(n, np.uint32)
+        raw = (hi.astype(np.uint64) << np.uint64(32)) | lo.astype(np.uint64)
+        out = raw.view(np.float64).astype(r.dtype)
+    else:
+        raw = np.asarray(kops.decode_bitplanes(jnp.asarray(planes), r.n_bits,
+                                               n, design, backend=backend))
+        out = raw.astype(np.uint32).astype(fmt["view"]).view(r.dtype)
+    return out.reshape(r.shape), nbytes
+
+
+# ------------------------------------------------------------ serialization --
+
+def exact_to_bytes(r: ExactRefactored) -> bytes:
+    import struct
+    parts = [struct.pack("<I", 0x4D445231)]
+    db = r.dtype.encode()
+    parts.append(struct.pack("<i", len(db)) + db)
+    parts.append(struct.pack("<iii", r.n_bits, r.n_exp, len(r.shape)))
+    if r.shape:
+        parts.append(struct.pack(f"<{len(r.shape)}q", *r.shape))
+    parts.append(struct.pack("<i", len(r.groups)))
+    for g, gp in zip(r.groups, r.group_planes):
+        gb = g.to_bytes()
+        parts.append(struct.pack("<iq", gp, len(gb)) + gb)
+    return b"".join(parts)
+
+
+def exact_from_bytes(buf: bytes) -> ExactRefactored:
+    import struct
+    off = 4
+    (ld,) = struct.unpack_from("<i", buf, off); off += 4
+    dtype = buf[off:off + ld].decode(); off += ld
+    n_bits, n_exp, nd = struct.unpack_from("<iii", buf, off); off += 12
+    shape = struct.unpack_from(f"<{nd}q", buf, off) if nd else ()
+    off += 8 * nd
+    (ng,) = struct.unpack_from("<i", buf, off); off += 4
+    groups, gp = [], []
+    for _ in range(ng):
+        g_planes, lg = struct.unpack_from("<iq", buf, off)
+        off += struct.calcsize("<iq")
+        groups.append(ll.Segment.from_bytes(buf[off:off + lg])); off += lg
+        gp.append(g_planes)
+    return ExactRefactored(dtype=dtype, shape=tuple(int(s) for s in shape),
+                           n_bits=n_bits, n_exp=n_exp, group_planes=gp,
+                           groups=groups)

@@ -1,0 +1,4 @@
+from repro.configs.base import (  # noqa: F401
+    ModelConfig, MoEConfig, MLAConfig, SSMConfig, ShapeConfig, RunConfig,
+    SHAPES, get_config, list_archs, smoke_config, input_specs, ARCH_REGISTRY,
+)

@@ -1,0 +1,388 @@
+"""Lossless encoding of packed bitplane groups (paper §5).
+
+Three codecs + the Algorithm-2 hybrid selector:
+
+* **Huffman** — canonical, length-limited (<=16 bit codes, zlib-style Kraft
+  fixup).  Encode is the GPU-parallel formulation: per-symbol code lengths ->
+  prefix-sum bit offsets -> two disjoint scatter-ORs into the packed word
+  stream.  Decode is chunk-parallel (the standard GPU decoder structure):
+  bit offsets of every CHUNK-th symbol are stored in the segment header, each
+  chunk is decoded independently with a 2^16 peek-LUT inside a lax.scan, and
+  chunks are vmapped.
+* **RLE** — scan-based: run breaks via neighbor comparison (+ forced breaks
+  every 32768 symbols so lengths fit uint16), run starts via scatter-min,
+  decode via cumsum + searchsorted (fully parallel).
+* **DC** — direct copy.
+
+CR estimators (paper §5.2): Huffman cost is the exact canonical-codebook bit
+cost from the histogram (the histogram is reused by the encoder, so the
+estimate is nearly free); RLE cost is 3 bytes/run from the run-break count.
+
+The hybrid selector is Algorithm 2 verbatim: groups of ``m`` planes, size
+threshold ``T_s``, CR threshold ``T_cr``, Huffman-priority ordering.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import heapq
+import struct
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+CHUNK = 4096          # symbols per parallel-decode chunk
+MAX_CODE_LEN = 16     # length-limited canonical Huffman
+RLE_BREAK = 32768     # forced run break so lengths fit in uint16
+
+
+# ---------------------------------------------------------------- codebook --
+
+def build_codebook(hist: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Canonical, length-limited Huffman codebook from a 256-bin histogram.
+
+    Returns (lengths uint8[256], codes uint32[256]); absent symbols get len 0.
+    """
+    hist = np.asarray(hist, dtype=np.int64)
+    present = np.nonzero(hist)[0]
+    lengths = np.zeros(256, dtype=np.uint8)
+    if len(present) == 0:
+        return lengths, np.zeros(256, dtype=np.uint32)
+    if len(present) == 1:
+        lengths[present[0]] = 1
+    else:
+        # standard heap-built tree -> depths
+        heap = [(int(hist[s]), int(s), None) for s in present]
+        counter = 256
+        heapq.heapify(heap)
+        parents: Dict[int, Tuple[int, int]] = {}
+        while len(heap) > 1:
+            f1, i1, _ = heapq.heappop(heap)
+            f2, i2, _ = heapq.heappop(heap)
+            parents[counter] = (i1, i2)
+            heapq.heappush(heap, (f1 + f2, counter, None))
+            counter += 1
+        root = heap[0][1]
+        stack = [(root, 0)]
+        while stack:
+            node, d = stack.pop()
+            if node < 256:
+                lengths[node] = max(d, 1)
+            else:
+                l, r = parents[node]
+                stack.append((l, d + 1))
+                stack.append((r, d + 1))
+        # length-limit + Kraft fixup
+        lengths[present] = np.minimum(lengths[present], MAX_CODE_LEN)
+        def kraft() -> int:
+            return int(np.sum(1 << (MAX_CODE_LEN - lengths[present].astype(np.int64))))
+        cap = 1 << MAX_CODE_LEN
+        while kraft() > cap:
+            # lengthen the currently-longest shortenable code (min freq impact)
+            cand = present[lengths[present] < MAX_CODE_LEN]
+            i = cand[np.argmax(lengths[cand])]
+            lengths[i] += 1
+    # canonical code assignment: sort by (length, symbol)
+    codes = np.zeros(256, dtype=np.uint32)
+    order = sorted(present, key=lambda s: (lengths[s], s))
+    code = 0
+    prev_len = lengths[order[0]]
+    for s in order:
+        code <<= int(lengths[s]) - int(prev_len)
+        codes[s] = code
+        code += 1
+        prev_len = lengths[s]
+    return lengths, codes
+
+
+def _build_decode_lut(lengths: np.ndarray, codes: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """2^16-entry peek LUT: top-16-bit window -> (symbol, code length)."""
+    lut_sym = np.zeros(1 << MAX_CODE_LEN, dtype=np.uint8)
+    lut_len = np.zeros(1 << MAX_CODE_LEN, dtype=np.uint8)
+    for s in range(256):
+        l = int(lengths[s])
+        if l == 0:
+            continue
+        base = int(codes[s]) << (MAX_CODE_LEN - l)
+        span = 1 << (MAX_CODE_LEN - l)
+        lut_sym[base:base + span] = s
+        lut_len[base:base + span] = l
+    return lut_sym, lut_len
+
+
+# ------------------------------------------------------------------ encode --
+
+@functools.partial(jax.jit, static_argnames=())
+def _huffman_pack(syms: jax.Array, lens_tab: jax.Array, codes_tab: jax.Array):
+    """Parallel bit-pack: returns (words uint32[cap], total_bits, chunk_offs)."""
+    syms = syms.astype(jnp.int32)
+    lens = lens_tab[syms].astype(jnp.uint32)
+    codes = codes_tab[syms].astype(jnp.uint32)
+    offs_incl = jnp.cumsum(lens, dtype=jnp.uint32)
+    offs = offs_incl - lens  # exclusive
+    total_bits = offs_incl[-1] if syms.shape[0] else jnp.uint32(0)
+    cap = syms.shape[0] * MAX_CODE_LEN // 32 + 2
+    codes_msb = codes << (jnp.uint32(32) - lens)
+    w = (offs >> jnp.uint32(5)).astype(jnp.int32)
+    sh = offs & jnp.uint32(31)
+    lo = codes_msb >> sh
+    spill = jnp.where(sh > 0, codes_msb << (jnp.uint32(32) - sh), jnp.uint32(0))
+    words = jnp.zeros((cap,), jnp.uint32)
+    words = words.at[w].add(lo, mode="drop")
+    words = words.at[w + 1].add(spill, mode="drop")
+    chunk_offs = offs[::CHUNK]
+    return words, total_bits, chunk_offs
+
+
+@functools.partial(jax.jit, static_argnames=("n_syms",))
+def _huffman_unpack(words: jax.Array, chunk_offs: jax.Array,
+                    lut_sym: jax.Array, lut_len: jax.Array, n_syms: int):
+    """Chunk-parallel decode: scan within chunk, vmap over chunks."""
+    words = jnp.concatenate([words, jnp.zeros((2,), jnp.uint32)])
+
+    def peek(p):
+        wi = (p >> jnp.uint32(5)).astype(jnp.int32)
+        sh = p & jnp.uint32(31)
+        hi = words[wi]
+        lo = words[wi + 1]
+        win = (hi << sh) | jnp.where(sh > 0, lo >> (jnp.uint32(32) - sh), jnp.uint32(0))
+        return win >> jnp.uint32(32 - MAX_CODE_LEN)
+
+    def chunk_decode(start_bit):
+        def step(p, _):
+            idx = peek(p).astype(jnp.int32)
+            sym = lut_sym[idx]
+            l = lut_len[idx].astype(jnp.uint32)
+            return p + l, sym
+        _, syms = jax.lax.scan(step, start_bit, None, length=CHUNK)
+        return syms
+
+    out = jax.vmap(chunk_decode)(chunk_offs.astype(jnp.uint32))
+    return out.reshape(-1)[:n_syms]
+
+
+@jax.jit
+def _rle_scan(syms: jax.Array):
+    n = syms.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    prev = jnp.concatenate([syms[:1] ^ jnp.uint8(255), syms[:-1]])
+    brk = (syms != prev) | (idx % RLE_BREAK == 0)
+    run_id = jnp.cumsum(brk.astype(jnp.int32)) - 1
+    nruns = run_id[-1] + 1
+    starts = jnp.full((n,), n, jnp.int32).at[run_id].min(idx)
+    values = syms[jnp.clip(starts, 0, n - 1)]
+    ends = jnp.concatenate([starts[1:], jnp.full((1,), n, jnp.int32)])
+    lengths = ends - starts
+    return values, lengths, nruns
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def _rle_expand(values: jax.Array, lengths: jax.Array, n: int):
+    cum = jnp.cumsum(lengths.astype(jnp.int32))
+    idx = jnp.searchsorted(cum, jnp.arange(n, dtype=jnp.int32), side="right")
+    return values[idx]
+
+
+# -------------------------------------------------------------- estimators --
+
+def estimate_huffman(hist: np.ndarray, n: int) -> Tuple[float, np.ndarray, np.ndarray]:
+    """Exact canonical-codebook cost estimate (paper: build tree, sum f*len).
+
+    Returns (CR, lengths, codes) so the encoder can reuse the codebook."""
+    lengths, codes = build_codebook(hist)
+    bits = int(np.sum(hist * lengths.astype(np.int64)))
+    overhead = 256 + 4 * (n // CHUNK + 1) + 16
+    bytes_est = bits / 8.0 + overhead
+    return (n / bytes_est if bytes_est else 1.0), lengths, codes
+
+
+def estimate_rle(n_runs: int, n: int) -> float:
+    bytes_est = 3.0 * n_runs + 16
+    return n / bytes_est if bytes_est else 1.0
+
+
+# ---------------------------------------------------------------- segments --
+
+_METHODS = {"dc": 0, "huffman": 1, "rle": 2, "empty": 3}
+_METHOD_NAMES = {v: k for k, v in _METHODS.items()}
+_MAGIC = 0x4D445253  # 'MDRS'
+
+
+@dataclasses.dataclass
+class Segment:
+    """One losslessly-encoded unit (a merged bitplane group)."""
+    method: str
+    n_bytes: int                      # original (uncompressed) byte count
+    payload: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+    meta: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    @property
+    def stored_bytes(self) -> int:
+        return sum(a.nbytes for a in self.payload.values()) + 64
+
+    def to_bytes(self) -> bytes:
+        parts = [struct.pack("<IIIi", _MAGIC, _METHODS[self.method],
+                             self.n_bytes, len(self.payload))]
+        parts.append(struct.pack("<i", len(self.meta)))
+        for k, v in sorted(self.meta.items()):
+            kb = k.encode()
+            parts.append(struct.pack("<i", len(kb)) + kb + struct.pack("<q", v))
+        for k, a in sorted(self.payload.items()):
+            kb = k.encode()
+            a = np.ascontiguousarray(a)
+            parts.append(struct.pack("<i", len(kb)) + kb)
+            parts.append(struct.pack("<ci", a.dtype.char.encode(), a.size))
+            parts.append(a.tobytes())
+        return b"".join(parts)
+
+    @staticmethod
+    def from_bytes(buf: bytes) -> "Segment":
+        off = 0
+        magic, mcode, n_bytes, n_payload = struct.unpack_from("<IIIi", buf, off)
+        off += 16
+        assert magic == _MAGIC, "corrupt segment"
+        (n_meta,) = struct.unpack_from("<i", buf, off)
+        off += 4
+        meta = {}
+        for _ in range(n_meta):
+            (lk,) = struct.unpack_from("<i", buf, off); off += 4
+            k = buf[off:off + lk].decode(); off += lk
+            (v,) = struct.unpack_from("<q", buf, off); off += 8
+            meta[k] = v
+        payload = {}
+        for _ in range(n_payload):
+            (lk,) = struct.unpack_from("<i", buf, off); off += 4
+            k = buf[off:off + lk].decode(); off += lk
+            ch, size = struct.unpack_from("<ci", buf, off)
+            off += struct.calcsize("<ci")
+            dt = np.dtype(ch.decode())
+            nb = dt.itemsize * size
+            payload[k] = np.frombuffer(buf[off:off + nb], dtype=dt).copy()
+            off += nb
+        return Segment(_METHOD_NAMES[mcode], n_bytes, payload, meta)
+
+
+# ------------------------------------------------------------------ codecs --
+
+def huffman_encode(data: np.ndarray, hist: Optional[np.ndarray] = None,
+                   codebook: Optional[Tuple[np.ndarray, np.ndarray]] = None) -> Segment:
+    data = np.asarray(data, dtype=np.uint8)
+    n = data.size
+    if hist is None:
+        hist = np.bincount(data, minlength=256)
+    if codebook is None:
+        lengths, codes = build_codebook(hist)
+    else:
+        lengths, codes = codebook
+    words, total_bits, chunk_offs = _huffman_pack(
+        jnp.asarray(data), jnp.asarray(lengths, dtype=jnp.uint32),
+        jnp.asarray(codes))
+    n_words = (int(total_bits) + 31) // 32 + 1
+    return Segment(
+        "huffman", n,
+        payload={
+            "words": np.asarray(words)[:n_words],
+            "chunk_offs": np.asarray(chunk_offs, dtype=np.uint32),
+            "lengths": lengths,
+        },
+        meta={"n_syms": n, "total_bits": int(total_bits)},
+    )
+
+
+def huffman_decode(seg: Segment) -> np.ndarray:
+    lengths = seg.payload["lengths"]
+    # canonical codes are reconstructible from lengths alone
+    codes = _codes_from_lengths(lengths)
+    lut_sym, lut_len = _build_decode_lut(lengths, codes)
+    n = seg.meta["n_syms"]
+    if n == 0:
+        return np.zeros(0, np.uint8)
+    out = _huffman_unpack(jnp.asarray(seg.payload["words"]),
+                          jnp.asarray(seg.payload["chunk_offs"]),
+                          jnp.asarray(lut_sym), jnp.asarray(lut_len), n)
+    return np.asarray(out, dtype=np.uint8)
+
+
+def _codes_from_lengths(lengths: np.ndarray) -> np.ndarray:
+    codes = np.zeros(256, dtype=np.uint32)
+    present = np.nonzero(lengths)[0]
+    if len(present) == 0:
+        return codes
+    order = sorted(present, key=lambda s: (lengths[s], s))
+    code = 0
+    prev_len = lengths[order[0]]
+    for s in order:
+        code <<= int(lengths[s]) - int(prev_len)
+        codes[s] = code
+        code += 1
+        prev_len = lengths[s]
+    return codes
+
+
+def rle_encode(data: np.ndarray) -> Segment:
+    data = np.asarray(data, dtype=np.uint8)
+    if data.size == 0:
+        return Segment("rle", 0, {"values": np.zeros(0, np.uint8),
+                                  "lengths": np.zeros(0, np.uint16)},
+                       {"n_syms": 0})
+    values, lengths, nruns = _rle_scan(jnp.asarray(data))
+    r = int(nruns)
+    return Segment("rle", data.size,
+                   payload={"values": np.asarray(values[:r]),
+                            "lengths": np.asarray(lengths[:r], dtype=np.uint16)},
+                   meta={"n_syms": data.size})
+
+
+def rle_decode(seg: Segment) -> np.ndarray:
+    n = seg.meta["n_syms"]
+    if n == 0:
+        return np.zeros(0, np.uint8)
+    out = _rle_expand(jnp.asarray(seg.payload["values"]),
+                      jnp.asarray(seg.payload["lengths"].astype(np.int32)), n)
+    return np.asarray(out, dtype=np.uint8)
+
+
+def dc_encode(data: np.ndarray) -> Segment:
+    data = np.asarray(data, dtype=np.uint8)
+    return Segment("dc", data.size, {"raw": data.copy()}, {"n_syms": data.size})
+
+
+def dc_decode(seg: Segment) -> np.ndarray:
+    return seg.payload["raw"]
+
+
+# -------------------------------------------------------------- Algorithm 2 --
+
+@dataclasses.dataclass
+class HybridConfig:
+    group_size: int = 4          # m: bitplanes merged per group
+    size_threshold: int = 4096   # T_s bytes
+    cr_threshold: float = 1.0    # T_cr
+    force: Optional[str] = None  # 'huffman' | 'rle' | 'dc' (benchmark modes)
+
+
+def compress_group(data: np.ndarray, cfg: HybridConfig = HybridConfig()) -> Segment:
+    """Algorithm 2, inner decision for one merged group (byte symbols)."""
+    data = np.asarray(data, dtype=np.uint8)
+    s = data.size
+    if cfg.force == "huffman":
+        return huffman_encode(data)
+    if cfg.force == "rle":
+        return rle_encode(data)
+    if cfg.force == "dc" or s <= cfg.size_threshold:
+        return dc_encode(data)
+    hist = np.bincount(data, minlength=256)
+    r_h, lengths, codes = estimate_huffman(hist, s)
+    if r_h > cfg.cr_threshold:
+        return huffman_encode(data, hist=hist, codebook=(lengths, codes))
+    _, _, nruns = _rle_scan(jnp.asarray(data))
+    r_r = estimate_rle(int(nruns), s)
+    if r_r > cfg.cr_threshold:
+        return rle_encode(data)
+    return dc_encode(data)
+
+
+def decompress_group(seg: Segment) -> np.ndarray:
+    return {"huffman": huffman_decode, "rle": rle_decode, "dc": dc_decode}[seg.method](seg)

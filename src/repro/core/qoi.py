@@ -1,0 +1,186 @@
+"""Progressive retrieval with guaranteed QoI error control (paper §6.2, Alg 3).
+
+QoI families (pointwise, per [39]):
+  * ``sum_squares``  f = sum_i v_i^2        (the paper's V_total)
+  * ``magnitude``    f = sqrt(sum_i v_i^2)
+  * ``linear``       f = sum_i a_i v_i
+  * ``product``      f = v_0 * v_1
+
+Error estimates are conservative given per-variable max-norm bounds eps_i:
+  |x^2 - xh^2|           <= eps*(2|xh| + eps)
+  |sqrt(g) - sqrt(gh)|   <= min(sqrt(dg), dg/(sqrt(max(gh-dg,0)) + sqrt(gh)))
+  |sum a_i v_i - ^|      <= sum |a_i| eps_i
+  |xy - xh yh|           <= |xh| eps_y + |yh| eps_x + eps_x eps_y
+
+Three next-error-bound estimators (paper §6.2): CP (decay + single-point
+re-evaluation on stale data), MA (fetch one more merged plane group per
+variable), MAPE (proportional jump eps/p with p = tau'/tau, switching to MA
+when p <= c).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.retrieve import ProgressiveReader
+
+
+@dataclasses.dataclass(frozen=True)
+class QoI:
+    kind: str
+    coeffs: Optional[Tuple[float, ...]] = None  # for 'linear'
+
+
+V_TOTAL = QoI("sum_squares")
+
+
+def qoi_value(vs: Sequence[jax.Array], q: QoI) -> jax.Array:
+    vs = [jnp.asarray(v, jnp.float32) for v in vs]
+    if q.kind == "sum_squares":
+        return sum(v * v for v in vs)
+    if q.kind == "magnitude":
+        return jnp.sqrt(sum(v * v for v in vs))
+    if q.kind == "linear":
+        return sum(float(a) * v for a, v in zip(q.coeffs, vs))
+    if q.kind == "product":
+        return vs[0] * vs[1]
+    raise ValueError(q.kind)
+
+
+def qoi_error_pointwise(v_hats: Sequence[jax.Array], eps: Sequence[float],
+                        q: QoI) -> jax.Array:
+    """Pointwise conservative bound |f(v) - f(v_hat)| given |v_i - v_hat_i| <= eps_i."""
+    vh = [jnp.asarray(v, jnp.float32) for v in v_hats]
+    e = [jnp.float32(x) for x in eps]
+    if q.kind in ("sum_squares", "magnitude"):
+        dg = sum(ei * (2.0 * jnp.abs(v) + ei) for v, ei in zip(vh, e))
+        if q.kind == "sum_squares":
+            return dg
+        gh = sum(v * v for v in vh)
+        lo = jnp.sqrt(jnp.maximum(gh - dg, 0.0))
+        denom = lo + jnp.sqrt(gh)
+        ratio = jnp.where(denom > 0, dg / jnp.maximum(denom, 1e-30), jnp.inf)
+        return jnp.minimum(jnp.sqrt(dg), ratio)
+    if q.kind == "linear":
+        return sum(abs(float(a)) * ei for a, ei in zip(q.coeffs, e)) * jnp.ones_like(vh[0])
+    if q.kind == "product":
+        x, y = vh
+        ex, ey = e
+        return jnp.abs(x) * ey + jnp.abs(y) * ex + ex * ey
+    raise ValueError(q.kind)
+
+
+@jax.jit
+def _max_and_argmax(x: jax.Array):
+    flat = x.reshape(-1)
+    i = jnp.argmax(flat)
+    return flat[i], i
+
+
+# ----------------------------------------------------------- Algorithm 3 ----
+
+@dataclasses.dataclass
+class QoIRetrievalResult:
+    values: List[np.ndarray]         # reconstructed variables
+    tau_estimated: float             # final max estimated QoI error (tau')
+    tau_requested: float
+    iterations: int
+    bytes_fetched: int
+    bitrate: float                   # bits per element, summed over variables
+    eps_final: List[float]
+    converged: bool
+
+
+def _point_estimate(vh_at_p: np.ndarray, eps: np.ndarray, q: QoI) -> float:
+    """Scalar QoI error estimate at one point (CP's stale re-evaluation)."""
+    return float(np.asarray(qoi_error_pointwise(
+        [jnp.asarray(v) for v in vh_at_p], list(eps), q)))
+
+
+def _qoi_scale(amaxs: np.ndarray, q: QoI) -> float:
+    """Maximal value of the QoI itself (the paper's init denominator)."""
+    if q.kind in ("sum_squares",):
+        return float(np.sum(amaxs ** 2))
+    if q.kind == "magnitude":
+        return float(np.sqrt(np.sum(amaxs ** 2)))
+    if q.kind == "linear":
+        return float(np.sum(np.abs(q.coeffs) * amaxs))
+    if q.kind == "product":
+        return float(np.prod(amaxs[:2]))
+    raise ValueError(q.kind)
+
+
+def progressive_qoi_retrieve(
+    readers: Sequence[ProgressiveReader],
+    q: QoI,
+    tau: float,
+    method: str = "mape",
+    c: float = 10.0,
+    max_iters: int = 100,
+) -> QoIRetrievalResult:
+    """Algorithm 3: iterate (fetch -> recompose -> estimate) until tau' <= tau."""
+    n_v = len(readers)
+    ranges = np.array([r.ref.data_range for r in readers])
+    amaxs = np.array([r.ref.data_amax for r in readers])
+
+    # initial data error bounds: relative value of tau over the QoI's maximal
+    # value, multiplied with the value range of the data (paper §6.2).
+    tau_scale = _qoi_scale(amaxs, q)
+    rel = min(tau / max(tau_scale, 1e-30), 1.0)
+    eps_req = np.maximum(rel * ranges, 1e-30)
+
+    tau_p = np.inf
+    bytes0 = sum(r.total_bytes_fetched for r in readers)
+    vals: List[np.ndarray] = [None] * n_v
+    eps_ach = np.zeros(n_v)
+    it = 0
+    converged = False
+    while it < max_iters:
+        it += 1
+        # fetch + recompose each variable toward its current data error bound
+        for i, r in enumerate(readers):
+            if method == "ma" and it > 1:
+                r.fetch_one_more_group()
+                vals[i], eps_ach[i] = r.reconstruct()
+            else:
+                vals[i], eps_ach[i], _ = r.retrieve(float(eps_req[i]))
+        err = qoi_error_pointwise([jnp.asarray(v) for v in vals],
+                                  list(eps_ach), q)
+        tau_p_arr, pstar = _max_and_argmax(err)
+        tau_p = float(tau_p_arr)
+        if tau_p <= tau:
+            converged = True
+            break
+        at_floor = all(s.groups_fetched >= len(p.groups)
+                       for r in readers for p, s in zip(r.ref.pieces, r.state))
+        if at_floor:
+            break
+        # estimate next data error bounds
+        if method == "cp":
+            vh_at_p = np.array([np.asarray(v).reshape(-1)[int(pstar)] for v in vals])
+            nxt = eps_ach.copy()
+            while _point_estimate(vh_at_p, nxt, q) > tau:
+                nxt = nxt / 2.0
+            eps_req = nxt
+        elif method == "ma":
+            pass  # handled by fetch_one_more_group above
+        elif method == "mape":
+            p = tau_p / tau
+            if p > c:
+                eps_req = eps_ach / p
+            else:
+                for r in readers:
+                    r.fetch_one_more_group()
+        else:
+            raise ValueError(method)
+
+    total_bytes = sum(r.total_bytes_fetched for r in readers) - bytes0
+    n_vals = readers[0].ref.n_elements * n_v  # bitrate per stored value
+    return QoIRetrievalResult(
+        values=vals, tau_estimated=tau_p, tau_requested=tau, iterations=it,
+        bytes_fetched=total_bytes, bitrate=8.0 * total_bytes / max(n_vals, 1),
+        eps_final=list(eps_ach), converged=converged)

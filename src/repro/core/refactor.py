@@ -1,0 +1,180 @@
+"""End-to-end data refactoring (paper Fig 1, write path).
+
+refactor_array:  x -> multilevel decompose -> per-piece exponent alignment ->
+bitplane encode -> merged plane groups -> Algorithm-2 hybrid lossless ->
+``Refactored`` (segments + manifest).  The manifest carries everything the
+reader needs for error-controlled progressive retrieval: per-piece exponent,
+element count, per-group stored sizes and methods.
+
+Pieces are indexed [0]=coarsest corner, [1]=detail_L ... [levels]=detail_1,
+matching ``decompose.decompose``.  Piece error weights for the max-norm bound
+are w_0 = 1 (corner), w_k = 2^ndim - 1 (details) per ``decompose.error_bound``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import struct
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import align as al
+from repro.core import decompose as dc
+from repro.core import lossless as ll
+from repro.kernels import ops as kops
+
+
+@dataclasses.dataclass
+class PieceMeta:
+    n: int                      # elements in this piece
+    exponent: int               # alignment exponent e  (max|x| <= 2**e)
+    weight: float               # error weight in the recomposition bound
+    sign_seg: ll.Segment
+    groups: List[ll.Segment]    # MSB-first merged plane groups
+    group_planes: List[int]     # planes per group (last may be short)
+
+    @property
+    def mag_bits(self) -> int:
+        return sum(self.group_planes)
+
+
+@dataclasses.dataclass
+class Refactored:
+    """Refactored representation of one array ('variable')."""
+    name: str
+    shape: Tuple[int, ...]
+    levels: int
+    design: str
+    mag_bits: int
+    group_size: int
+    data_amax: float
+    data_range: float
+    pieces: List[PieceMeta]
+
+    @property
+    def n_elements(self) -> int:
+        return int(np.prod(self.shape))
+
+    @property
+    def stored_bytes(self) -> int:
+        return sum(p.sign_seg.stored_bytes + sum(g.stored_bytes for g in p.groups)
+                   for p in self.pieces)
+
+    # -- error model -------------------------------------------------------
+    def piece_eps(self, piece: int, planes_kept: int) -> float:
+        pm = self.pieces[piece]
+        return al.truncation_error(pm.exponent, planes_kept, self.mag_bits)
+
+    def bound(self, planes_per_piece: Sequence[int]) -> float:
+        eps = [self.piece_eps(i, p) for i, p in enumerate(planes_per_piece)]
+        return dc.error_bound(eps, ndim=len(self.shape), data_amax=self.data_amax)
+
+
+def refactor_array(
+    x: np.ndarray | jax.Array,
+    name: str = "var",
+    levels: Optional[int] = None,
+    design: str = "register_block",
+    mag_bits: int = al.DEFAULT_MAG_BITS,
+    hybrid: ll.HybridConfig = ll.HybridConfig(),
+    backend: str = "auto",
+) -> Refactored:
+    x = jnp.asarray(x, dtype=jnp.float32)
+    if levels is None:
+        levels = dc.num_levels(x.shape)
+    pieces = dc.decompose(x, levels)
+    ndim = x.ndim
+    amax = float(jnp.max(jnp.abs(x)))
+    rng = float(jnp.max(x) - jnp.min(x)) if x.size else 0.0
+
+    group_planes: List[int] = []
+    left = mag_bits
+    while left > 0:
+        g = min(hybrid.group_size, left)
+        group_planes.append(g)
+        left -= g
+
+    metas: List[PieceMeta] = []
+    for pi, piece in enumerate(pieces):
+        mag, sign, e = al.align_encode(piece, mag_bits)
+        planes = kops.encode_bitplanes(mag, mag_bits, design, backend=backend)
+        sign_planes = kops.encode_bitplanes(sign, 1, design, backend=backend)
+        sign_seg = ll.compress_group(np.asarray(sign_planes).view(np.uint8).reshape(-1),
+                                     hybrid)
+        groups: List[ll.Segment] = []
+        row = 0
+        planes_np = np.asarray(planes)
+        for g in group_planes:
+            blob = planes_np[row:row + g].reshape(-1).view(np.uint8)
+            seg = ll.compress_group(blob, hybrid)
+            seg.meta["n_planes"] = g
+            seg.meta["n_words"] = planes_np.shape[1]
+            groups.append(seg)
+            row += g
+        metas.append(PieceMeta(
+            n=int(piece.shape[0]), exponent=int(e),
+            weight=1.0 if pi == 0 else float((1 << ndim) - 1),
+            sign_seg=sign_seg, groups=groups, group_planes=group_planes))
+    return Refactored(name=name, shape=tuple(x.shape), levels=levels,
+                      design=design, mag_bits=mag_bits,
+                      group_size=hybrid.group_size, data_amax=amax,
+                      data_range=rng, pieces=metas)
+
+
+# ------------------------------------------------------------ serialization --
+
+def refactored_to_bytes(r: Refactored) -> bytes:
+    head = {
+        "name": r.name.encode(), "shape": r.shape, "levels": r.levels,
+        "design": r.design.encode(), "mag_bits": r.mag_bits,
+        "group_size": r.group_size, "amax": r.data_amax, "range": r.data_range,
+    }
+    parts = [struct.pack("<I", 0x4D445230)]
+    nb = head["name"]; db = head["design"]
+    parts.append(struct.pack("<i", len(nb)) + nb)
+    parts.append(struct.pack("<i", len(db)) + db)
+    parts.append(struct.pack("<iii", r.levels, r.mag_bits, r.group_size))
+    parts.append(struct.pack("<dd", r.data_amax, r.data_range))
+    parts.append(struct.pack("<i", len(r.shape)) + struct.pack(f"<{len(r.shape)}q", *r.shape))
+    parts.append(struct.pack("<i", len(r.pieces)))
+    for p in r.pieces:
+        parts.append(struct.pack("<qid", p.n, p.exponent, p.weight))
+        sb = p.sign_seg.to_bytes()
+        parts.append(struct.pack("<q", len(sb)) + sb)
+        parts.append(struct.pack("<i", len(p.groups)))
+        for g, gp in zip(p.groups, p.group_planes):
+            gb = g.to_bytes()
+            parts.append(struct.pack("<iq", gp, len(gb)) + gb)
+    return b"".join(parts)
+
+
+def refactored_from_bytes(buf: bytes) -> Refactored:
+    off = 4
+    (ln,) = struct.unpack_from("<i", buf, off); off += 4
+    name = buf[off:off + ln].decode(); off += ln
+    (ld,) = struct.unpack_from("<i", buf, off); off += 4
+    design = buf[off:off + ld].decode(); off += ld
+    levels, mag_bits, group_size = struct.unpack_from("<iii", buf, off); off += 12
+    amax, rng = struct.unpack_from("<dd", buf, off); off += 16
+    (nd,) = struct.unpack_from("<i", buf, off); off += 4
+    shape = struct.unpack_from(f"<{nd}q", buf, off); off += 8 * nd
+    (npieces,) = struct.unpack_from("<i", buf, off); off += 4
+    pieces = []
+    for _ in range(npieces):
+        n, e, w = struct.unpack_from("<qid", buf, off); off += struct.calcsize("<qid")
+        (ls,) = struct.unpack_from("<q", buf, off); off += 8
+        sign_seg = ll.Segment.from_bytes(buf[off:off + ls]); off += ls
+        (ng,) = struct.unpack_from("<i", buf, off); off += 4
+        groups, gp = [], []
+        for _ in range(ng):
+            g_planes, lg = struct.unpack_from("<iq", buf, off); off += struct.calcsize("<iq")
+            groups.append(ll.Segment.from_bytes(buf[off:off + lg])); off += lg
+            gp.append(g_planes)
+        pieces.append(PieceMeta(n=n, exponent=e, weight=w, sign_seg=sign_seg,
+                                groups=groups, group_planes=gp))
+    return Refactored(name=name, shape=tuple(int(s) for s in shape),
+                      levels=levels, design=design, mag_bits=mag_bits,
+                      group_size=group_size, data_amax=amax, data_range=rng,
+                      pieces=pieces)

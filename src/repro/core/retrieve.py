@@ -1,0 +1,164 @@
+"""Error-controlled progressive retrieval (paper Fig 1, read path).
+
+``ProgressiveReader`` keeps the fetched-segment state across requests, so
+successive retrievals are *incremental*: only the delta plane groups are
+fetched (and counted toward bytes_fetched), exactly as in MDR.
+
+Rate allocation is greedy by error-reduction-per-byte over (piece, group)
+candidates — the classic MDR allocation — against the conservative max-norm
+bound  eps_corner + ndim * sum(eps_level) + roundoff slack.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import align as al
+from repro.core import decompose as dc
+from repro.core import lossless as ll
+from repro.core.refactor import Refactored
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+
+@dataclasses.dataclass
+class _PieceState:
+    groups_fetched: int = 0
+    planes: Optional[np.ndarray] = None     # (P, W) uint32, MSB-first prefix
+    sign: Optional[np.ndarray] = None       # decoded sign plane (1, W)
+    bytes_fetched: int = 0
+
+
+class ProgressiveReader:
+    """Stateful reader over a ``Refactored`` variable."""
+
+    def __init__(self, ref: Refactored, backend: str = "auto"):
+        self.ref = ref
+        self.backend = backend
+        self.state = [_PieceState() for _ in ref.pieces]
+        self.total_bytes_fetched = 0
+
+    # ----------------------------------------------------------- planning --
+    def planes_kept(self) -> List[int]:
+        return [sum(p.group_planes[:s.groups_fetched])
+                for p, s in zip(self.ref.pieces, self.state)]
+
+    def current_bound(self) -> float:
+        return self.ref.bound(self.planes_kept())
+
+    def floor_bound(self) -> float:
+        return self.ref.bound([p.mag_bits for p in self.ref.pieces])
+
+    def plan(self, tol: float) -> List[int]:
+        """Greedy (piece, group) allocation: target planes-kept per piece."""
+        r = self.ref
+        kept = self.planes_kept()
+        groups = [s.groups_fetched for s in self.state]
+        bound = r.bound(kept)
+        while bound > tol:
+            best, best_score = None, 0.0
+            for i, pm in enumerate(r.pieces):
+                gi = groups[i]
+                if gi >= len(pm.groups):
+                    continue
+                new_kept = kept[i] + pm.group_planes[gi]
+                d_eps = pm.weight * (r.piece_eps(i, kept[i]) - r.piece_eps(i, new_kept))
+                cost = pm.groups[gi].stored_bytes
+                if gi == 0:
+                    cost += pm.sign_seg.stored_bytes
+                score = d_eps / max(cost, 1)
+                if score > best_score:
+                    best, best_score = i, score
+            if best is None:
+                break  # everything fetched; bound is at the floor
+            bound -= r.pieces[best].weight * (
+                r.piece_eps(best, kept[best])
+                - r.piece_eps(best, kept[best] + r.pieces[best].group_planes[groups[best]]))
+            kept[best] += r.pieces[best].group_planes[groups[best]]
+            groups[best] += 1
+        return groups
+
+    # ------------------------------------------------------------ fetching --
+    def _fetch_to(self, target_groups: List[int]) -> int:
+        """Fetch segment deltas; returns bytes fetched now."""
+        fetched = 0
+        for i, (pm, st) in enumerate(zip(self.ref.pieces, self.state)):
+            tg = target_groups[i]
+            if tg <= st.groups_fetched:
+                continue
+            if st.groups_fetched == 0:
+                sign_blob = ll.decompress_group(pm.sign_seg)
+                w = pm.groups[0].meta["n_words"]
+                st.sign = sign_blob.view(np.uint32).reshape(1, w)
+                fetched += pm.sign_seg.stored_bytes
+            new_rows = []
+            for g in range(st.groups_fetched, tg):
+                seg = pm.groups[g]
+                blob = ll.decompress_group(seg)
+                w = seg.meta["n_words"]
+                new_rows.append(blob.view(np.uint32).reshape(-1, w))
+                fetched += seg.stored_bytes
+            stack = [st.planes] if st.planes is not None else []
+            st.planes = np.concatenate(stack + new_rows, axis=0)
+            st.groups_fetched = tg
+            st.bytes_fetched += fetched
+        self.total_bytes_fetched += fetched
+        return fetched
+
+    def fetch_one_more_group(self) -> int:
+        """MA primitive: fetch the single best next merged group (greedy by
+        error-reduction-per-byte) — the finest augmentation granularity."""
+        r = self.ref
+        kept = self.planes_kept()
+        best, best_score = None, -1.0
+        for i, pm in enumerate(r.pieces):
+            gi = self.state[i].groups_fetched
+            if gi >= len(pm.groups):
+                continue
+            new_kept = kept[i] + pm.group_planes[gi]
+            d_eps = pm.weight * (r.piece_eps(i, kept[i]) - r.piece_eps(i, new_kept))
+            cost = pm.groups[gi].stored_bytes
+            if gi == 0:
+                cost += pm.sign_seg.stored_bytes
+            score = d_eps / max(cost, 1)
+            if score > best_score:
+                best, best_score = i, score
+        if best is None:
+            return 0
+        target = [s.groups_fetched for s in self.state]
+        target[best] += 1
+        return self._fetch_to(target)
+
+    # -------------------------------------------------------- reconstruction --
+    def reconstruct(self) -> Tuple[np.ndarray, float]:
+        """Decode current state -> (array, guaranteed max-norm error bound)."""
+        r = self.ref
+        pieces_dec = []
+        for pm, st in zip(r.pieces, self.state):
+            p_kept = sum(pm.group_planes[:st.groups_fetched])
+            if p_kept == 0:
+                pieces_dec.append(jnp.zeros((pm.n,), jnp.float32))
+                continue
+            mag = kops.decode_bitplanes(jnp.asarray(st.planes), r.mag_bits,
+                                        pm.n, r.design, backend=self.backend)
+            sign = kops.decode_bitplanes(jnp.asarray(st.sign), 1, pm.n,
+                                         r.design, backend=self.backend)
+            x = al.align_decode(mag, sign, jnp.int32(pm.exponent),
+                                r.mag_bits, planes_kept=p_kept)
+            pieces_dec.append(x)
+        out = dc.recompose(pieces_dec, r.shape, r.levels)
+        return np.asarray(out), self.current_bound()
+
+    def retrieve(self, tol: float, relative: bool = False) -> Tuple[np.ndarray, float, int]:
+        """Progressively retrieve to |x - x_hat|_inf <= tol.
+
+        Returns (x_hat, achieved_bound, bytes_fetched_this_call)."""
+        if relative:
+            tol = tol * self.ref.data_range
+        target = self.plan(tol)
+        fetched = self._fetch_to(target)
+        x, bound = self.reconstruct()
+        return x, bound, fetched

@@ -1,0 +1,58 @@
+"""jit'd dispatch wrappers for the bitplane kernels.
+
+Backend selection:
+  'auto'             -> Pallas kernel on TPU, pure-jnp reference on CPU/GPU
+  'pallas'           -> Pallas compiled (TPU)
+  'pallas_interpret' -> Pallas interpret mode (CPU validation of the kernel body)
+  'jnp'              -> pure-jnp reference (also the fast CPU path)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels import bitplane as _bp
+
+_DEFAULT_BACKEND = "auto"
+
+
+def _resolve(backend: str) -> str:
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    return backend
+
+
+@functools.partial(jax.jit, static_argnames=("num_planes", "design", "backend",
+                                             "tiles_per_block", "unroll"))
+def encode_bitplanes(mag: jax.Array, num_planes: int,
+                     design: str = "register_block",
+                     backend: str = _DEFAULT_BACKEND,
+                     tiles_per_block: int = 8,
+                     unroll: str = "butterfly") -> jax.Array:
+    """(N,) uint32 magnitudes -> (num_planes, W) packed planes (MSB-first)."""
+    b = _resolve(backend)
+    if b == "jnp":
+        return _ref.encode(mag, num_planes, design)
+    return _bp.encode_pallas(mag, num_planes, design,
+                             tiles_per_block=tiles_per_block, unroll=unroll,
+                             interpret=(b == "pallas_interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("num_planes_total", "n", "design",
+                                             "backend", "tiles_per_block",
+                                             "unroll"))
+def decode_bitplanes(planes: jax.Array, num_planes_total: int, n: int,
+                     design: str = "register_block",
+                     backend: str = _DEFAULT_BACKEND,
+                     tiles_per_block: int = 8,
+                     unroll: str = "butterfly") -> jax.Array:
+    """(P, W) plane prefix -> (n,) uint32 magnitudes truncated to P planes."""
+    b = _resolve(backend)
+    if b == "jnp":
+        return _ref.decode(planes, num_planes_total, n, design)
+    return _bp.decode_pallas(planes, num_planes_total, n, design,
+                             tiles_per_block=tiles_per_block, unroll=unroll,
+                             interpret=(b == "pallas_interpret"))

@@ -1,0 +1,142 @@
+"""Pure-jnp reference (oracle) implementations of bitplane packing.
+
+Two on-disk FORMATS exist (the paper's three *execution* designs map onto
+them — `shuffle` shares the `locality` format, exactly as warp-ballot
+produces consecutive-element words on GPUs):
+
+``locality``  word ``w`` of plane ``j`` holds bit ``(Bm-1-j)`` of elements
+              ``32w .. 32w+31`` (consecutive elements -> bit lanes).
+
+``register_block``  elements are processed in tiles of 32x128 = 4096; within
+              tile ``t`` the element at (slot i, lane l), i.e. flat index
+              ``4096 t + 128 i + l``, contributes bit ``i`` of word
+              ``128 t + l``.  This is the paper's lane-strided interleave
+              (warp width 32 -> TPU lane width 128): loads are fully
+              coalesced and no cross-lane exchange is needed.
+
+Planes are stored MSB-first: plane 0 carries bit (num_planes-1), so a
+*prefix* of planes is exactly a precision-truncated representation.
+
+All refs operate on uint32 magnitudes and return ``(num_planes, W) uint32``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+TILE_SUB = 32      # slots per lane (bits per packed word)
+TILE_LANE = 128    # TPU lane width
+TILE = TILE_SUB * TILE_LANE  # 4096 elements per tile
+
+_IOTA32 = None
+
+
+def _pad_to(x: jnp.ndarray, multiple: int) -> jnp.ndarray:
+    n = x.shape[0]
+    rem = (-n) % multiple
+    if rem:
+        x = jnp.concatenate([x, jnp.zeros((rem,), dtype=x.dtype)])
+    return x
+
+
+def padded_words(n: int, design: str = "register_block") -> int:
+    """Number of uint32 words per plane for an n-element input.
+
+    All designs pad N to a whole 4096-element tile so the three formats have
+    identical plane sizes (and TPU-friendly 128-word alignment)."""
+    n_pad = n + ((-n) % TILE)
+    return n_pad // 32
+
+
+# ---------------------------------------------------------------- locality --
+
+def encode_locality(mag: jnp.ndarray, num_planes: int) -> jnp.ndarray:
+    """(N,) uint32 -> (num_planes, N/32) uint32, consecutive-element words."""
+    x = _pad_to(mag.astype(jnp.uint32), TILE).reshape(-1, 32)  # (W, 32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)  # bit position within word
+    planes = []
+    for j in range(num_planes):
+        b = num_planes - 1 - j
+        bits = (x >> jnp.uint32(b)) & jnp.uint32(1)
+        planes.append(jnp.sum(bits << shifts[None, :], axis=1, dtype=jnp.uint32))
+    return jnp.stack(planes)
+
+
+def decode_locality(planes: jnp.ndarray, num_planes_total: int, n: int) -> jnp.ndarray:
+    """(P, W) uint32 prefix -> (n,) uint32 magnitude truncated to top P planes."""
+    p, w = planes.shape
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    out = jnp.zeros((w, 32), dtype=jnp.uint32)
+    for j in range(p):
+        b = num_planes_total - 1 - j
+        bits = (planes[j][:, None] >> shifts[None, :]) & jnp.uint32(1)
+        out = out | (bits << jnp.uint32(b))
+    return out.reshape(-1)[:n]
+
+
+# ---------------------------------------------------------- register_block --
+
+def encode_register_block(mag: jnp.ndarray, num_planes: int) -> jnp.ndarray:
+    """(N,) uint32 -> (num_planes, N/32) uint32, lane-strided interleave."""
+    x = _pad_to(mag.astype(jnp.uint32), TILE).reshape(-1, TILE_SUB, TILE_LANE)
+    shifts = jnp.arange(TILE_SUB, dtype=jnp.uint32)  # slot i -> bit i
+    planes = []
+    for j in range(num_planes):
+        b = num_planes - 1 - j
+        bits = (x >> jnp.uint32(b)) & jnp.uint32(1)  # (T, 32, 128)
+        words = jnp.sum(bits << shifts[None, :, None], axis=1, dtype=jnp.uint32)
+        planes.append(words.reshape(-1))  # (T*128,)
+    return jnp.stack(planes)
+
+
+def decode_register_block(planes: jnp.ndarray, num_planes_total: int, n: int) -> jnp.ndarray:
+    p, w = planes.shape
+    t = w // TILE_LANE
+    pw = planes.reshape(p, t, TILE_LANE)
+    shifts = jnp.arange(TILE_SUB, dtype=jnp.uint32)
+    out = jnp.zeros((t, TILE_SUB, TILE_LANE), dtype=jnp.uint32)
+    for j in range(p):
+        b = num_planes_total - 1 - j
+        bits = (pw[j][:, None, :] >> shifts[None, :, None]) & jnp.uint32(1)
+        out = out | (bits << jnp.uint32(b))
+    return out.reshape(-1)[:n]
+
+
+ENCODERS = {"locality": encode_locality, "shuffle": encode_locality,
+            "register_block": encode_register_block}
+DECODERS = {"locality": decode_locality, "shuffle": decode_locality,
+            "register_block": decode_register_block}
+
+
+def encode(mag, num_planes: int, design: str = "register_block"):
+    return ENCODERS[design](mag, num_planes)
+
+
+def decode(planes, num_planes_total: int, n: int, design: str = "register_block"):
+    return DECODERS[design](planes, num_planes_total, n)
+
+
+# NumPy twin used by tests as an independent oracle --------------------------
+
+def encode_np(mag: np.ndarray, num_planes: int, design: str = "register_block") -> np.ndarray:
+    mag = np.asarray(mag, dtype=np.uint32)
+    n_pad = len(mag) + ((-len(mag)) % TILE)
+    x = np.zeros(n_pad, dtype=np.uint32)
+    x[: len(mag)] = mag
+    out = np.zeros((num_planes, n_pad // 32), dtype=np.uint32)
+    for j in range(num_planes):
+        b = num_planes - 1 - j
+        bits = (x >> b) & 1
+        if design == "register_block":
+            br = bits.reshape(-1, TILE_SUB, TILE_LANE)
+            words = np.zeros((br.shape[0], TILE_LANE), dtype=np.uint32)
+            for i in range(TILE_SUB):
+                words |= br[:, i, :].astype(np.uint32) << i
+            out[j] = words.reshape(-1)
+        else:
+            br = bits.reshape(-1, 32)
+            words = np.zeros(br.shape[0], dtype=np.uint32)
+            for i in range(32):
+                words |= br[:, i].astype(np.uint32) << i
+            out[j] = words
+    return out

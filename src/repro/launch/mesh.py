@@ -1,0 +1,27 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state.  The dry-run sets XLA_FLAGS=--xla_force_host_platform_device_count=512
+before any jax import; everything else sees the real device count.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(16,16) ('data','model') single pod; (2,16,16) ('pod','data','model')
+    across two pods (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1, pod: int = 1):
+    """Small mesh over however many (host) devices are available — used by
+    smoke tests, elastic-restore tests and the weak-scaling benchmark."""
+    shape = tuple(x for x in (pod, data, model))
+    axes = ("pod", "data", "model")
+    if pod == 1:
+        shape, axes = (data, model), ("data", "model")
+    return jax.make_mesh(shape, axes)

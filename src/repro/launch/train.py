@@ -1,0 +1,54 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-7b --smoke \
+        --steps 30 [--grad-compress-planes 8] [--ckpt-dir DIR]
+
+``--smoke`` uses the reduced config (CPU-runnable); without it the full
+config is built (requires a real TPU slice; on CPU it will OOM).  The
+production meshes come from launch/mesh.py; on a multi-host TPU slice run
+one process per host (jax.distributed.initialize) with the same command.
+MoE archs train with the shard_map EP dispatch (§Perf default).
+"""
+import argparse
+import dataclasses
+
+from repro.configs.base import get_config, list_archs, smoke_config
+from repro.models.model import Model, count_params
+from repro.optim import adamw
+from repro.train.loop import Trainer, TrainerConfig, synthetic_data
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--grad-compress-planes", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, dispatch="shard_map"))
+    model = Model(cfg)
+    print(f"{cfg.name}: {count_params(cfg) / 1e6:.1f}M params")
+    trainer = Trainer(
+        model,
+        adamw.AdamWConfig(lr=3e-4, warmup_steps=max(args.steps // 10, 1),
+                          total_steps=args.steps),
+        TrainerConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
+                      ckpt_dir=args.ckpt_dir, log_every=5,
+                      grad_compress_planes=args.grad_compress_planes),
+        synthetic_data(cfg, args.batch, args.seq))
+    res = trainer.run()
+    for m in res["metrics"]:
+        print(f"step {m['step']:5d}  loss {m['loss']:.4f}  "
+              f"{m['dt'] * 1e3:8.1f} ms")
+
+
+if __name__ == "__main__":
+    main()

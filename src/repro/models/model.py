@@ -1,0 +1,187 @@
+"""Model facade: abstract params, init, train loss, prefill, decode.
+
+One class serves all 10 architectures; behavior is driven entirely by
+ModelConfig (stack_plan picks the block pattern).  All public entry points
+are pure functions of (params, inputs) and jit/pjit-compatible.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constraint
+from repro.models import transformer as T
+from repro.models.params import (PSpec, is_pspec, tree_init,
+                                 tree_param_count, tree_partition_specs,
+                                 tree_shape_structs)
+
+
+def model_abstract(cfg: ModelConfig) -> Dict[str, Any]:
+    p: Dict[str, Any] = {}
+    vtp = "tp" if cfg.vocab_size % 16 == 0 else None  # hubert: V=504 replicated
+    if not cfg.external_embed:
+        p["embed"] = PSpec((cfg.vocab_size, cfg.d_model), (vtp, "fsdp"))
+    p["blocks"] = T.stack_abstract(cfg)
+    p["final_norm"] = PSpec((cfg.d_model,), (None,), init="ones")
+    if not cfg.tie_embeddings:
+        p["head"] = PSpec((cfg.d_model, cfg.vocab_size), ("fsdp", vtp))
+    if cfg.mtp_depth:
+        p["mtp"] = {
+            "proj": PSpec((2 * cfg.d_model, cfg.d_model), ("fsdp", None)),
+            "block": T.block_abstract(cfg, "attn"),
+            "norm": PSpec((cfg.d_model,), (None,), init="ones"),
+        }
+    return p
+
+
+def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    from repro.models.moe import moe_abstract
+    total = tree_param_count(model_abstract(cfg))
+    if active_only and cfg.moe is not None:
+        m = cfg.moe
+        expert_p = tree_param_count(
+            {k: v for k, v in moe_abstract(cfg).items()
+             if k in ("w1", "w2", "w3")})
+        n_moe_layers = (cfg.n_layers - m.first_dense) // m.layer_period
+        inactive = expert_p * n_moe_layers * (1 - m.top_k / m.n_experts)
+        total -= int(inactive)
+    return total
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+
+    # ---------------------------------------------------------------- setup --
+    def abstract_params(self):
+        return model_abstract(self.cfg)
+
+    def partition_specs(self, drop_fsdp: bool = False):
+        return tree_partition_specs(self.abstract_params(), drop_fsdp)
+
+    def shape_structs(self):
+        return tree_shape_structs(self.abstract_params(), self.cfg.param_dtype)
+
+    def init(self, key: jax.Array):
+        return tree_init(self.abstract_params(), key, self.cfg.param_dtype)
+
+    # ------------------------------------------------------------- forward --
+    def _embed(self, params, tokens=None, embeds=None) -> jax.Array:
+        cdt = jnp.dtype(self.cfg.compute_dtype)
+        if embeds is not None:
+            return embeds.astype(cdt)
+        e = params["embed"].astype(cdt)[tokens]
+        return constraint(e, "dp", None, None)
+
+    def _head(self, params, x: jax.Array) -> jax.Array:
+        cdt = jnp.dtype(self.cfg.compute_dtype)
+        x = T.L.norm(x, params["final_norm"], self.cfg.norm)
+        if self.cfg.tie_embeddings:
+            w = params["embed"].astype(cdt).T
+        else:
+            w = params["head"].astype(cdt)
+        logits = jnp.einsum("bsd,dv->bsv", x, w)
+        vtp = "tp" if self.cfg.vocab_size % 16 == 0 else None
+        return constraint(logits.astype(jnp.float32), "dp", None, vtp)
+
+    def forward(self, params, tokens=None, embeds=None, vision_states=None,
+                positions=None) -> jax.Array:
+        """Full-sequence forward -> fp32 logits (B,S,V)."""
+        x = self._embed(params, tokens, embeds)
+        b, s, _ = x.shape
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+        x, _, _ = T.stack_apply(params["blocks"], x, self.cfg, positions,
+                                vision_states=vision_states)
+        return self._head(params, x)
+
+    # ---------------------------------------------------------------- loss --
+    def loss(self, params, batch: Dict[str, jax.Array]) -> jax.Array:
+        cfg = self.cfg
+        x = self._embed(params, batch.get("tokens"), batch.get("embeds"))
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+        h, _, aux = T.stack_apply(params["blocks"], x, cfg, positions,
+                                  vision_states=batch.get("vision_states"))
+        logits = self._head(params, h)
+        labels = batch["labels"]
+        ce = _xent(logits, labels)
+        loss = ce + aux
+        if cfg.mtp_depth and "tokens" in batch:
+            loss = loss + 0.1 * self._mtp_loss(params, h, batch, positions)
+        return loss
+
+    def _mtp_loss(self, params, h, batch, positions) -> jax.Array:
+        """DeepSeek-V3 multi-token prediction: one extra depth, predicts t+2."""
+        cfg = self.cfg
+        cdt = jnp.dtype(cfg.compute_dtype)
+        mtp = params["mtp"]
+        tokens, labels = batch["tokens"], batch["labels"]
+        # combine hidden state at t with embedding of token t+1
+        nxt = jnp.concatenate([tokens[:, 1:], tokens[:, -1:]], axis=1)
+        e_next = params["embed"].astype(cdt)[nxt]
+        z = jnp.concatenate([h, e_next], axis=-1)
+        z = jnp.einsum("bsd,dk->bsk", z, mtp["proj"].astype(cdt))
+        z, _, _ = T.block_apply(mtp["block"], z, cfg, "attn", positions)
+        z = T.L.norm(z, mtp["norm"], cfg.norm)
+        w = params["embed"].astype(cdt).T if cfg.tie_embeddings else params["head"].astype(cdt)
+        logits2 = jnp.einsum("bsd,dv->bsv", z, w).astype(jnp.float32)
+        lab2 = jnp.concatenate([labels[:, 1:], labels[:, -1:]], axis=1)
+        return _xent(logits2, lab2)
+
+    # -------------------------------------------------------------- serving --
+    def prefill(self, params, tokens=None, embeds=None, vision_states=None,
+                max_len: Optional[int] = None
+                ) -> Tuple[jax.Array, Dict[str, Any]]:
+        """Run the prompt; returns (last-position logits, decode cache)."""
+        cfg = self.cfg
+        x = self._embed(params, tokens, embeds)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+        h, caches, _ = T.stack_apply(params["blocks"], x, cfg, positions,
+                                     caches=None, vision_states=vision_states)
+        logits = self._head(params, h[:, -1:, :])
+        if max_len is not None and max_len > s:
+            caches = _pad_caches(caches, max_len, seq_axis=2)
+        return logits, caches
+
+    def init_cache_structs(self, batch: int, max_len: int):
+        return T.stack_cache_abstract(self.cfg, batch, max_len)
+
+    def decode_step(self, params, cache, index: jax.Array,
+                    tokens: jax.Array, vision_states=None
+                    ) -> Tuple[jax.Array, Dict[str, Any]]:
+        """One-token decode: tokens (B,1) at position ``index`` (scalar)."""
+        cfg = self.cfg
+        x = self._embed(params, tokens)
+        b = x.shape[0]
+        positions = jnp.broadcast_to(index[None, None], (b, 1)).astype(jnp.int32)
+        h, new_cache, _ = T.stack_apply(params["blocks"], x, cfg, positions,
+                                        caches=cache, cache_index=index,
+                                        vision_states=vision_states)
+        return self._head(params, h), new_cache
+
+
+def _xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+_SEQ_CACHE_KEYS = ("k", "v", "ckv", "kr", "ks", "vs")  # caches with a seq axis
+
+
+def _pad_caches(caches, max_len: int, seq_axis: int):
+    def pad(path, x):
+        leaf_key = path[-1].key if hasattr(path[-1], "key") else None
+        if leaf_key in _SEQ_CACHE_KEYS and x.shape[seq_axis] < max_len:
+            pads = [(0, 0)] * x.ndim
+            pads[seq_axis] = (0, max_len - x.shape[seq_axis])
+            return jnp.pad(x, pads)
+        return x
+    return jax.tree_util.tree_map_with_path(pad, caches)

@@ -1,0 +1,250 @@
+"""Attention-free sequence mixers: RWKV6 (Finch) and Mamba (selective SSM).
+
+Both are formulated as a single ``lax.scan`` over time for training/prefill
+(rolled HLO: compile-time stays flat in sequence length, memory O(state)),
+and as an O(1)-state single-step update for decode — this is what makes the
+``long_500k`` cells feasible where quadratic attention is skipped.
+
+RWKV6 implements the paper-defining *data-dependent decay*: the per-channel
+decay ``w_t = exp(-exp(w0 + lora(x_t-shift)))`` varies per token, plus the
+ddlerp token-shift mixers of Finch (arXiv:2404.05892).
+
+Mamba implements the selective SSM (S4D discretization, input-dependent
+Delta/B/C) with the depthwise causal conv, as used by Jamba's Mamba layers.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constraint
+from repro.models.params import PSpec
+from repro.models.layers import rmsnorm
+
+RWKV_HEAD_DIM = 64
+DDLERP_RANK = 32
+DECAY_RANK = 64
+
+
+# ------------------------------------------------------------------- RWKV6 --
+
+def rwkv_time_mix_abstract(cfg: ModelConfig) -> Dict[str, PSpec]:
+    d = cfg.d_model
+    h = d // RWKV_HEAD_DIM
+    tp = "tp" if h % 16 == 0 else None
+    return {
+        "mu_x": PSpec((d,), (None,), init="zeros"),
+        "mu": PSpec((5, d), (None, None), init="zeros"),       # w,k,v,r,g
+        "ddlerp_a": PSpec((d, 5 * DDLERP_RANK), ("fsdp", None)),
+        "ddlerp_b": PSpec((5, DDLERP_RANK, d), (None, None, None), init="zeros"),
+        "w0": PSpec((d,), (None,), init="zeros"),
+        "decay_a": PSpec((d, DECAY_RANK), ("fsdp", None)),
+        "decay_b": PSpec((DECAY_RANK, d), (None, None), init="zeros"),
+        "u": PSpec((d,), (None,), init="zeros"),               # bonus
+        "wr": PSpec((d, d), ("fsdp", tp)),
+        "wk": PSpec((d, d), ("fsdp", tp)),
+        "wv": PSpec((d, d), ("fsdp", tp)),
+        "wg": PSpec((d, d), ("fsdp", tp)),
+        "ln_w": PSpec((d,), (None,), init="ones"),             # per-head groupnorm
+        "wo": PSpec((d, d), (tp, "fsdp")),
+    }
+
+
+def _rwkv_ddlerp(p, x, sx, cdt):
+    """Finch data-dependent lerp: five mixed inputs (w,k,v,r,g)."""
+    dx = sx - x
+    xxx = x + dx * p["mu_x"].astype(cdt)
+    a = jnp.tanh(jnp.einsum("btd,dr->btr", xxx, p["ddlerp_a"].astype(cdt)))
+    a = a.reshape(*a.shape[:-1], 5, DDLERP_RANK)
+    mix = p["mu"].astype(cdt) + jnp.einsum("btir,ird->btid", a, p["ddlerp_b"].astype(cdt))
+    return [x + dx * mix[..., i, :] for i in range(5)]
+
+
+def rwkv_time_mix_apply(p, x: jax.Array, cfg: ModelConfig,
+                        state: Optional[Dict] = None
+                        ) -> Tuple[jax.Array, Dict]:
+    """x: (B,S,D). state (decode): {'shift': (B,D), 'wkv': (B,H,K,V)}."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    b, s, d = x.shape
+    h = d // RWKV_HEAD_DIM
+    if state is None:
+        sx = jnp.concatenate([jnp.zeros_like(x[:, :1]), x[:, :-1]], axis=1)
+        wkv0 = jnp.zeros((b, h, RWKV_HEAD_DIM, RWKV_HEAD_DIM), jnp.float32)
+    else:
+        sx = state["shift"][:, None, :].astype(cdt)
+        wkv0 = state["wkv"]
+    xw, xk, xv, xr, xg = _rwkv_ddlerp(p, x, sx, cdt)
+
+    # data-dependent decay (the Finch signature)
+    wlog = p["w0"].astype(jnp.float32) + jnp.einsum(
+        "btd,dr,rk->btk", xw.astype(jnp.float32),
+        p["decay_a"].astype(jnp.float32), p["decay_b"].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(jnp.clip(wlog, -8.0, 4.0)))           # (B,S,D) in (0,1)
+
+    r = jnp.einsum("btd,de->bte", xr, p["wr"].astype(cdt))
+    k = jnp.einsum("btd,de->bte", xk, p["wk"].astype(cdt))
+    v = jnp.einsum("btd,de->bte", xv, p["wv"].astype(cdt))
+    g = jax.nn.silu(jnp.einsum("btd,de->bte", xg, p["wg"].astype(cdt)))
+
+    hd = RWKV_HEAD_DIM
+    rh = r.reshape(b, s, h, hd).astype(jnp.float32)
+    kh = k.reshape(b, s, h, hd).astype(jnp.float32)
+    vh = v.reshape(b, s, h, hd).astype(jnp.float32)
+    wh = w.reshape(b, s, h, hd)
+    u = p["u"].astype(jnp.float32).reshape(h, hd)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp                   # (B,H,K) / (B,H,V) / (B,H,K)
+        kv = kt[..., :, None] * vt[..., None, :]          # (B,H,K,V)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, S + u[None, :, :, None] * kv)
+        S_new = wt[..., :, None] * S + kv
+        return S_new, out
+
+    xs = (jnp.moveaxis(rh, 1, 0), jnp.moveaxis(kh, 1, 0),
+          jnp.moveaxis(vh, 1, 0), jnp.moveaxis(wh, 1, 0))
+    # two-level scan: outer over chunks with rematerialized inner scans.
+    # A flat scan would checkpoint the (B,H,K,V) state at EVERY step for the
+    # backward pass (4096 steps x 16KB/head = GBs per layer); chunked remat
+    # stores only chunk-boundary states and recomputes inside (64x less).
+    chunk = 64
+    if s % chunk == 0 and s > chunk:
+        nch = s // chunk
+        xs_c = jax.tree.map(
+            lambda a: a.reshape(nch, chunk, *a.shape[1:]), xs)
+
+        @jax.checkpoint
+        def chunk_step(S, inp_c):
+            return jax.lax.scan(step, S, inp_c)
+
+        S_fin, outs = jax.lax.scan(chunk_step, wkv0, xs_c)
+        outs = outs.reshape(s, b, h, hd)
+    else:
+        S_fin, outs = jax.lax.scan(step, wkv0, xs)
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, s, h, hd)       # (B,S,H,V)
+
+    # per-head groupnorm
+    mean = jnp.mean(out, axis=-1, keepdims=True)
+    var = jnp.var(out, axis=-1, keepdims=True)
+    out = (out - mean) * jax.lax.rsqrt(var + 64e-5)
+    out = out.reshape(b, s, d) * p["ln_w"].astype(jnp.float32)
+    out = (out.astype(cdt) * g)
+    y = jnp.einsum("btd,de->bte", out, p["wo"].astype(cdt))
+    new_state = {"shift": x[:, -1, :], "wkv": S_fin}
+    return constraint(y, "dp", None, None), new_state
+
+
+def rwkv_channel_mix_abstract(cfg: ModelConfig) -> Dict[str, PSpec]:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "mu_k": PSpec((d,), (None,), init="zeros"),
+        "mu_r": PSpec((d,), (None,), init="zeros"),
+        "wk": PSpec((d, f), ("fsdp", "tp")),
+        "wv": PSpec((f, d), ("tp", "fsdp")),
+        "wr": PSpec((d, d), ("fsdp", None)),
+    }
+
+
+def rwkv_channel_mix_apply(p, x: jax.Array, cfg: ModelConfig,
+                           state: Optional[Dict] = None
+                           ) -> Tuple[jax.Array, Dict]:
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if state is None:
+        sx = jnp.concatenate([jnp.zeros_like(x[:, :1]), x[:, :-1]], axis=1)
+    else:
+        sx = state["shift"][:, None, :].astype(cdt)
+    xk = x + (sx - x) * p["mu_k"].astype(cdt)
+    xr = x + (sx - x) * p["mu_r"].astype(cdt)
+    k = jnp.einsum("btd,df->btf", xk, p["wk"].astype(cdt))
+    k = jnp.square(jax.nn.relu(k))
+    v = jnp.einsum("btf,fd->btd", k, p["wv"].astype(cdt))
+    r = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, p["wr"].astype(cdt)))
+    return r * v, {"shift": x[:, -1, :]}
+
+
+# ------------------------------------------------------------------- Mamba --
+
+def mamba_abstract(cfg: ModelConfig) -> Dict[str, PSpec]:
+    d = cfg.d_model
+    ssm = cfg.ssm
+    din = ssm.expand * d
+    dtr = ssm.dt_rank or d // 16
+    ds = ssm.d_state
+    return {
+        "in_proj": PSpec((d, 2 * din), ("fsdp", "tp")),
+        "conv_w": PSpec((ssm.conv_width, din), (None, "tp")),
+        "conv_b": PSpec((din,), ("tp",), init="zeros"),
+        "w_dt_down": PSpec((din, dtr), ("tp", None)),
+        "w_dt_up": PSpec((dtr, din), (None, "tp")),
+        "dt_bias": PSpec((din,), ("tp",), init="zeros"),
+        "w_b": PSpec((din, ds), ("tp", None)),
+        "w_c": PSpec((din, ds), ("tp", None)),
+        "a_log": PSpec((din, ds), ("tp", None), init="zeros"),
+        "d_skip": PSpec((din,), ("tp",), init="ones"),
+        "out_proj": PSpec((din, d), ("tp", "fsdp")),
+    }
+
+
+def mamba_apply(p, x: jax.Array, cfg: ModelConfig,
+                state: Optional[Dict] = None) -> Tuple[jax.Array, Dict]:
+    """x: (B,S,D).  state (decode): {'conv': (B,W-1,din), 'ssm': (B,din,ds)}."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    ssm = cfg.ssm
+    b, s, d = x.shape
+    din = ssm.expand * d
+    ds = ssm.d_state
+    wconv = ssm.conv_width
+
+    xz = jnp.einsum("btd,de->bte", x, p["in_proj"].astype(cdt))
+    xin, z = xz[..., :din], xz[..., din:]
+
+    # depthwise causal conv
+    if state is None:
+        pad = jnp.zeros((b, wconv - 1, din), cdt)
+    else:
+        pad = state["conv"].astype(cdt)
+    xpad = jnp.concatenate([pad, xin], axis=1)                 # (B, S+W-1, din)
+    conv = sum(xpad[:, i:i + s, :] * p["conv_w"][i].astype(cdt)
+               for i in range(wconv)) + p["conv_b"].astype(cdt)
+    xc = jax.nn.silu(conv)
+
+    dt = jnp.einsum("bte,er,rf->btf", xc, p["w_dt_down"].astype(cdt),
+                    p["w_dt_up"].astype(cdt)) + p["dt_bias"].astype(cdt)
+    dt = jax.nn.softplus(dt.astype(jnp.float32))               # (B,S,din)
+    Bm = jnp.einsum("bte,es->bts", xc, p["w_b"].astype(cdt)).astype(jnp.float32)
+    Cm = jnp.einsum("bte,es->bts", xc, p["w_c"].astype(cdt)).astype(jnp.float32)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))               # (din, ds)
+
+    h0 = state["ssm"] if state is not None else jnp.zeros((b, din, ds), jnp.float32)
+    xc32 = xc.astype(jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp                                  # (B,din),(B,din),(B,ds),(B,ds)
+        da = jnp.exp(dtt[..., None] * A[None])                 # (B,din,ds)
+        h_new = da * h + (dtt * xt)[..., None] * bt[:, None, :]
+        y = jnp.einsum("bds,bs->bd", h_new, ct)
+        return h_new, y
+
+    xs = (jnp.moveaxis(xc32, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(Bm, 1, 0), jnp.moveaxis(Cm, 1, 0))
+    # chunked-remat scan (see rwkv wkv): store only chunk-boundary SSM states
+    chunk = 64
+    if s % chunk == 0 and s > chunk:
+        nch = s // chunk
+        xs_c = jax.tree.map(lambda a: a.reshape(nch, chunk, *a.shape[1:]), xs)
+
+        @jax.checkpoint
+        def chunk_step(hc, inp_c):
+            return jax.lax.scan(step, hc, inp_c)
+
+        h_fin, ys = jax.lax.scan(chunk_step, h0, xs_c)
+        ys = ys.reshape(s, *ys.shape[2:])
+    else:
+        h_fin, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1) + xc32 * p["d_skip"].astype(jnp.float32)
+    y = (y.astype(cdt) * jax.nn.silu(z))
+    out = jnp.einsum("bte,ed->btd", y, p["out_proj"].astype(cdt))
+    new_state = {"conv": xpad[:, -(wconv - 1):, :], "ssm": h_fin}
+    return constraint(out, "dp", None, None), new_state

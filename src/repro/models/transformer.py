@@ -1,0 +1,273 @@
+"""Layer-stack composition: pattern-based blocks scanned over depth.
+
+Architectures are expressed as a list of *stack groups*; each group is a
+repeating pattern of sub-layers scanned with stacked parameters, so the HLO
+holds one copy of each distinct block body regardless of depth (compile time
+and module size stay flat in n_layers):
+
+  uniform        N x [attn/ssm + mlp]                (most archs)
+  first_dense    K x dense-FFN block, (N-K) x MoE    (deepseek v2/v3)
+  jamba          (N/8) x [8-layer period: 1 attn + 7 mamba, MoE every 2nd]
+  vision_cross   (N/5) x [4 self-attn + 1 gated cross-attn]
+
+Every block body is wrapped in jax.checkpoint (remat) when cfg.remat is set.
+Caches thread through the same scans as stacked pytrees.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models.params import PSpec, is_pspec
+
+
+# --------------------------------------------------------- block templates --
+
+def _norm_spec(cfg: ModelConfig) -> PSpec:
+    return PSpec((cfg.d_model,), (None,), init="ones")
+
+
+def block_abstract(cfg: ModelConfig, kind: str) -> Dict:
+    """Parameter tree for one block of the given kind."""
+    p: Dict[str, Any] = {"norm1": _norm_spec(cfg)}
+    if kind == "attn":
+        p["attn"] = L.mla_abstract(cfg) if cfg.mla else L.gqa_abstract(cfg)
+        if not cfg.parallel_block:
+            p["norm2"] = _norm_spec(cfg)
+        p["mlp"] = L.mlp_abstract(cfg)
+    elif kind == "attn_moe":
+        p["attn"] = L.mla_abstract(cfg) if cfg.mla else L.gqa_abstract(cfg)
+        p["norm2"] = _norm_spec(cfg)
+        p["moe"] = MOE.moe_abstract(cfg)
+    elif kind == "rwkv":
+        p["tmix"] = SSM.rwkv_time_mix_abstract(cfg)
+        p["norm2"] = _norm_spec(cfg)
+        p["cmix"] = SSM.rwkv_channel_mix_abstract(cfg)
+    elif kind == "mamba":
+        p["mamba"] = SSM.mamba_abstract(cfg)
+        p["norm2"] = _norm_spec(cfg)
+        p["mlp"] = L.mlp_abstract(cfg)
+    elif kind == "mamba_moe":
+        p["mamba"] = SSM.mamba_abstract(cfg)
+        p["norm2"] = _norm_spec(cfg)
+        p["moe"] = MOE.moe_abstract(cfg)
+    elif kind == "cross":
+        p["attn"] = L.gqa_abstract(cfg)
+        p["norm2"] = _norm_spec(cfg)
+        p["mlp"] = L.mlp_abstract(cfg)
+        p["gate_attn"] = PSpec((1,), (None,), init="zeros")
+        p["gate_mlp"] = PSpec((1,), (None,), init="zeros")
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def block_apply(p, x: jax.Array, cfg: ModelConfig, kind: str,
+                positions: jax.Array, *,
+                cache: Optional[Dict] = None, cache_index=None,
+                vision_states: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    nrm = functools.partial(L.norm, kind=cfg.norm)
+
+    if kind in ("attn", "attn_moe"):
+        h = nrm(x, p["norm1"])
+        if cfg.mla:
+            a, new_cache = L.mla_apply(p["attn"], h, cfg, positions,
+                                       cache=cache, cache_index=cache_index)
+        else:
+            a, new_cache = L.gqa_apply(p["attn"], h, cfg, positions,
+                                       cache=cache, cache_index=cache_index)
+        if cfg.parallel_block and kind == "attn":
+            x = x + a + L.mlp_apply(p["mlp"], h, cfg)
+        else:
+            x = x + a
+            h2 = nrm(x, p["norm2"])
+            if kind == "attn_moe":
+                mo, aux = MOE.moe_apply(p["moe"], h2, cfg)
+                x = x + mo
+            else:
+                x = x + L.mlp_apply(p["mlp"], h2, cfg)
+    elif kind == "rwkv":
+        h = nrm(x, p["norm1"])
+        a, tstate = SSM.rwkv_time_mix_apply(p["tmix"], h, cfg,
+                                            state=cache.get("tmix") if cache else None)
+        x = x + a
+        h2 = nrm(x, p["norm2"])
+        c, cstate = SSM.rwkv_channel_mix_apply(p["cmix"], h2, cfg,
+                                               state=cache.get("cmix") if cache else None)
+        x = x + c
+        new_cache = {"tmix": tstate, "cmix": cstate}
+    elif kind in ("mamba", "mamba_moe"):
+        h = nrm(x, p["norm1"])
+        a, mstate = SSM.mamba_apply(p["mamba"], h, cfg,
+                                    state=cache.get("mamba") if cache else None)
+        x = x + a
+        h2 = nrm(x, p["norm2"])
+        if kind == "mamba_moe":
+            mo, aux = MOE.moe_apply(p["moe"], h2, cfg)
+            x = x + mo
+        else:
+            x = x + L.mlp_apply(p["mlp"], h2, cfg)
+        new_cache = {"mamba": mstate}
+    elif kind == "cross":
+        h = nrm(x, p["norm1"])
+        a, _ = L.gqa_apply(p["attn"], h, cfg, positions,
+                           kv_override=(vision_states,), causal=False)
+        x = x + jnp.tanh(p["gate_attn"].astype(x.dtype)) * a
+        h2 = nrm(x, p["norm2"])
+        x = x + jnp.tanh(p["gate_mlp"].astype(x.dtype)) * L.mlp_apply(p["mlp"], h2, cfg)
+        new_cache = {}  # vision KV is recomputed (stub frontend, tiny)
+    else:
+        raise ValueError(kind)
+    return x, new_cache, aux
+
+
+# ------------------------------------------------------------ stack groups --
+
+@dataclasses.dataclass(frozen=True)
+class StackGroup:
+    name: str
+    repeats: int                 # scan length
+    kinds: Tuple[str, ...]       # sub-layer kinds within one scan step
+
+
+def stack_plan(cfg: ModelConfig) -> List[StackGroup]:
+    n = cfg.n_layers
+    if cfg.ssm and cfg.ssm.kind == "rwkv6":
+        return [StackGroup("rwkv", n, ("rwkv",))]
+    if cfg.ssm and cfg.ssm.kind == "mamba":       # jamba hybrid
+        period = cfg.ssm.attn_period
+        kinds = []
+        for i in range(period):
+            mixer = "attn" if i == cfg.ssm.attn_offset else "mamba"
+            use_moe = cfg.moe is not None and (i % cfg.moe.layer_period
+                                               == cfg.moe.layer_period - 1)
+            if mixer == "attn":
+                kinds.append("attn_moe" if use_moe else "attn")
+            else:
+                kinds.append("mamba_moe" if use_moe else "mamba")
+        return [StackGroup("hybrid", n // period, tuple(kinds))]
+    if cfg.cross_attn_period:
+        per = cfg.cross_attn_period
+        kinds = tuple(["attn"] * (per - 1) + ["cross"])
+        return [StackGroup("vision", n // per, kinds)]
+    if cfg.moe is not None:
+        fd = cfg.moe.first_dense
+        groups = []
+        if fd:
+            groups.append(StackGroup("dense", fd, ("attn",)))
+        groups.append(StackGroup("moe", n - fd, ("attn_moe",)))
+        return groups
+    return [StackGroup("dense", n, ("attn",))]
+
+
+def stack_abstract(cfg: ModelConfig) -> Dict[str, Any]:
+    """Stacked (leading repeat axis) parameter tree for all groups."""
+    out: Dict[str, Any] = {}
+    for g in stack_plan(cfg):
+        step = {f"sub{i}_{kind}": block_abstract(cfg, kind)
+                for i, kind in enumerate(g.kinds)}
+        def add_axis(ps: PSpec) -> PSpec:
+            return PSpec((g.repeats,) + ps.shape, (None,) + ps.axes,
+                         init=ps.init, scale=ps.scale, dtype=ps.dtype)
+        out[g.name] = jax.tree.map(add_axis, step, is_leaf=is_pspec)
+    return out
+
+
+def stack_apply(params: Dict, x: jax.Array, cfg: ModelConfig,
+                positions: jax.Array, *,
+                caches: Optional[Dict] = None, cache_index=None,
+                vision_states: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, Dict, jax.Array]:
+    """Run all stack groups.  Returns (x, new_caches, total_aux)."""
+    total_aux = jnp.zeros((), jnp.float32)
+    new_caches: Dict[str, Any] = {}
+
+    for g in stack_plan(cfg):
+        gp = params[g.name]
+        gc = caches.get(g.name) if caches is not None else None
+
+        def step(carry, xs):
+            h, auxc = carry
+            p_layer, c_layer = xs
+            new_c = {}
+            for i, kind in enumerate(g.kinds):
+                key = f"sub{i}_{kind}"
+                sub_c = c_layer[key] if c_layer is not None else None
+                h, nc, aux = block_apply(
+                    p_layer[key], h, cfg, kind, positions,
+                    cache=sub_c, cache_index=cache_index,
+                    vision_states=vision_states)
+                new_c[key] = nc if nc is not None else {}
+            return (h, auxc + aux), new_c
+
+        if cfg.remat:
+            step = jax.checkpoint(step)
+
+        (x, total_aux), nc = jax.lax.scan(step, (x, total_aux), (gp, gc))
+        new_caches[g.name] = nc
+    return x, new_caches, total_aux
+
+
+def stack_cache_abstract(cfg: ModelConfig, batch: int, max_len: int
+                         ) -> Dict[str, Any]:
+    """ShapeDtypeStruct tree for the decode cache (stacked per group)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    h = cfg.d_model // SSM.RWKV_HEAD_DIM if cfg.ssm and cfg.ssm.kind == "rwkv6" else 0
+    out: Dict[str, Any] = {}
+    for g in stack_plan(cfg):
+        step: Dict[str, Any] = {}
+        for i, kind in enumerate(g.kinds):
+            key = f"sub{i}_{kind}"
+            if kind in ("attn", "attn_moe"):
+                if cfg.mla:
+                    m = cfg.mla
+                    step[key] = {
+                        "ckv": jax.ShapeDtypeStruct((g.repeats, batch, max_len,
+                                                     m.kv_lora_rank), cdt),
+                        "kr": jax.ShapeDtypeStruct((g.repeats, batch, max_len,
+                                                    m.qk_rope_dim), cdt),
+                    }
+                else:
+                    dh = cfg.head_dim
+                    kv_dt = jnp.int8 if cfg.kv_cache_int8_scale else cdt
+                    step[key] = {
+                        "k": jax.ShapeDtypeStruct((g.repeats, batch, max_len,
+                                                   cfg.n_kv_heads, dh), kv_dt),
+                        "v": jax.ShapeDtypeStruct((g.repeats, batch, max_len,
+                                                   cfg.n_kv_heads, dh), kv_dt),
+                    }
+                    if cfg.kv_cache_int8_scale:  # per-(token, head) scales
+                        for sk in ("ks", "vs"):
+                            step[key][sk] = jax.ShapeDtypeStruct(
+                                (g.repeats, batch, max_len, cfg.n_kv_heads),
+                                jnp.bfloat16)
+            elif kind == "rwkv":
+                step[key] = {
+                    "tmix": {"shift": jax.ShapeDtypeStruct((g.repeats, batch, cfg.d_model), cdt),
+                             "wkv": jax.ShapeDtypeStruct((g.repeats, batch, h,
+                                                          SSM.RWKV_HEAD_DIM,
+                                                          SSM.RWKV_HEAD_DIM), jnp.float32)},
+                    "cmix": {"shift": jax.ShapeDtypeStruct((g.repeats, batch, cfg.d_model), cdt)},
+                }
+            elif kind in ("mamba", "mamba_moe"):
+                din = cfg.ssm.expand * cfg.d_model
+                step[key] = {"mamba": {
+                    "conv": jax.ShapeDtypeStruct((g.repeats, batch,
+                                                  cfg.ssm.conv_width - 1, din), cdt),
+                    "ssm": jax.ShapeDtypeStruct((g.repeats, batch, din,
+                                                 cfg.ssm.d_state), jnp.float32)}}
+            else:  # cross
+                step[key] = {}
+        out[g.name] = step
+    return out

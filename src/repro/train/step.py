@@ -1,0 +1,118 @@
+"""Train/serve step builders (pjit-ready pure functions + their shardings)."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed import sharding as shd
+from repro.launch.policy import CellPolicy
+from repro.models.model import Model
+from repro.optim import adamw
+
+
+def batch_pspec(policy: CellPolicy, ndim: int) -> P:
+    return P(policy.batch_axes, *([None] * (ndim - 1)))
+
+
+def make_train_step(model: Model, opt_cfg: adamw.AdamWConfig,
+                    policy: CellPolicy):
+    """Returns (train_step, in/out sharding helper trees)."""
+    n_micro = policy.n_micro
+
+    def train_step(params, opt_state, batch):
+        def micro_loss(p, mb):
+            return model.loss(p, mb)
+
+        if n_micro == 1:
+            loss, grads = jax.value_and_grad(micro_loss)(params, batch)
+        else:
+            def reshape(x):
+                b = x.shape[0]
+                return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+            mbs = jax.tree.map(reshape, batch)
+
+            def body(carry, mb):
+                gacc, lacc = carry
+                l, g = jax.value_and_grad(micro_loss)(params, mb)
+                gacc = jax.tree.map(jnp.add, gacc, g)
+                return (gacc, lacc + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(body, (g0, jnp.zeros((), jnp.float32)), mbs)
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+            loss = loss / n_micro
+
+        new_params, new_opt, metrics = adamw.update(grads, opt_state, params,
+                                                    opt_cfg)
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, batch):
+        cfg = model.cfg
+        if cfg.encoder_only:
+            logits = model.forward(params,
+                                   tokens=batch.get("tokens"),
+                                   embeds=batch.get("embeds"))
+            return logits[:, -1, :], None
+        logits, caches = model.prefill(params,
+                                       tokens=batch.get("tokens"),
+                                       embeds=batch.get("embeds"),
+                                       vision_states=batch.get("vision_states"))
+        return logits, caches
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, cache, index, batch):
+        return model.decode_step(params, cache, index, batch["tokens"],
+                                 vision_states=batch.get("vision_states"))
+    return decode_step
+
+
+# ------------------------------------------------------- sharding builders --
+
+def train_shardings(model: Model, policy: CellPolicy, mesh,
+                    opt_cfg: adamw.AdamWConfig):
+    pspecs = model.partition_specs()
+    opt_specs = adamw.state_partition_specs(pspecs)
+    ns = lambda spec: NamedSharding(mesh, spec)
+    param_sh = jax.tree.map(ns, pspecs)
+    opt_sh = jax.tree.map(ns, opt_specs,
+                          is_leaf=lambda x: isinstance(x, P))
+    return param_sh, opt_sh
+
+
+def batch_shardings(batch_specs: Dict[str, jax.ShapeDtypeStruct],
+                    policy: CellPolicy, mesh):
+    out = {}
+    for k, v in batch_specs.items():
+        out[k] = NamedSharding(mesh, batch_pspec(policy, len(v.shape)))
+    return out
+
+
+_SEQ_KEYS = ("k", "v", "ckv", "kr", "ks", "vs")
+
+
+def cache_shardings(cache_structs, policy: CellPolicy, mesh):
+    """Decode caches: batch dim (axis 1, after the layer-stack dim) over the
+    batch axes; attention caches' L axis (axis 2) over 'model' when the
+    policy picked flash-decoding seq-sharding."""
+    batch = tuple(a for a in policy.batch_axes if a in mesh.axis_names) or None
+    def f(path, x):
+        key = path[-1].key if hasattr(path[-1], "key") else None
+        spec = [None] * len(x.shape)
+        if len(x.shape) >= 2:
+            spec[1] = batch
+        if policy.seq_shard and key in _SEQ_KEYS and len(x.shape) >= 3:
+            spec[2] = "model"
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree_util.tree_map_with_path(f, cache_structs)

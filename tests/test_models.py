@@ -1,0 +1,177 @@
+"""Per-architecture smoke tests (reduced configs): forward/train step on CPU,
+output shapes + finite values; MoE dispatch vs oracle; SSM scan-vs-step;
+prefill+decode consistency with full forward."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import list_archs, smoke_config, get_config, SHAPES, cell_supported
+from repro.models.model import Model, count_params
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models.params import tree_init
+
+ARCHS = list_archs()
+B, S = 2, 24
+
+
+def _batch(cfg, key=1):
+    rng = jax.random.PRNGKey(key)
+    batch = {"labels": jax.random.randint(rng, (B, S), 0, cfg.vocab_size)}
+    if cfg.external_embed:
+        batch["embeds"] = jax.random.normal(rng, (B, S, cfg.d_model), jnp.float32)
+    else:
+        batch["tokens"] = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
+    if cfg.cross_attn_period:
+        batch["vision_states"] = jax.random.normal(
+            rng, (B, cfg.n_vision_tokens, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_grad(arch):
+    cfg = smoke_config(arch)
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    loss, grads = jax.jit(jax.value_and_grad(lambda p: m.loss(p, batch)))(params)
+    assert np.isfinite(float(loss))
+    gnorm = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0
+    logits = m.forward(params, tokens=batch.get("tokens"),
+                       embeds=batch.get("embeds"),
+                       vision_states=batch.get("vision_states"))
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCHS
+                                  if not smoke_config(a).encoder_only])
+def test_prefill_decode_matches_forward(arch):
+    """decode(prefill(x[:-1]), x[-1]) logits == forward(x) at the last pos."""
+    cfg = smoke_config(arch)
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    toks = batch["tokens"]
+    vis = batch.get("vision_states")
+    full = m.forward(params, tokens=toks, vision_states=vis)
+    logits_p, caches = jax.jit(
+        lambda p, t: m.prefill(p, tokens=t[:, :-1], vision_states=vis,
+                               max_len=S + 4))(params, toks)
+    out, _ = jax.jit(
+        lambda p, c, t: m.decode_step(p, c, jnp.int32(S - 1), t,
+                                      vision_states=vis))(
+        params, caches, toks[:, -1:])
+    a = np.asarray(full[:, -1])
+    b = np.asarray(out[:, 0])
+    np.testing.assert_allclose(a, b, rtol=2e-2, atol=2e-2)
+
+
+def test_param_counts_match_advertised():
+    expected = {"rwkv6-3b": 3.1, "deepseek-67b": 67.4, "h2o-danube-3-4b": 4.0,
+                "command-r-plus-104b": 103.8, "qwen2-7b": 7.6,
+                "hubert-xlarge": 1.26, "jamba-v0.1-52b": 51.6,
+                "deepseek-v2-236b": 235.7, "deepseek-v3-671b": 671.7,
+                "llama-3.2-vision-90b": 87.7}
+    for arch, exp in expected.items():
+        n = count_params(get_config(arch)) / 1e9
+        assert abs(n - exp) / exp < 0.02, (arch, n, exp)
+    # MoE active counts
+    assert abs(count_params(get_config("deepseek-v3-671b"), active_only=True)
+               / 1e9 - 38.2) < 1.5
+    assert abs(count_params(get_config("deepseek-v2-236b"), active_only=True)
+               / 1e9 - 21.4) < 1.5
+
+
+def test_moe_dispatch_matches_oracle():
+    from repro.configs.base import ModelConfig, MoEConfig
+    cfg = ModelConfig(name="t", family="moe", n_layers=1, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=64,
+                      moe=MoEConfig(n_experts=8, top_k=2, d_expert=32,
+                                    n_shared=1, capacity_factor=8.0),
+                      compute_dtype="float32")
+    p = tree_init(MOE.moe_abstract(cfg), jax.random.PRNGKey(0), "float32")
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 64))
+    out, aux = MOE.moe_apply(p, x, cfg)
+    ref = MOE.moe_reference(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+    assert float(aux) > 0
+
+
+def test_moe_capacity_drops_gracefully():
+    from repro.configs.base import ModelConfig, MoEConfig
+    cfg = ModelConfig(name="t", family="moe", n_layers=1, d_model=32,
+                      n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=64,
+                      moe=MoEConfig(n_experts=4, top_k=2, d_expert=16,
+                                    capacity_factor=0.25),
+                      compute_dtype="float32")
+    p = tree_init(MOE.moe_abstract(cfg), jax.random.PRNGKey(0), "float32")
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 32))
+    out, _ = MOE.moe_apply(p, x, cfg)
+    assert bool(jnp.isfinite(out).all())
+
+
+@pytest.mark.parametrize("kind", ["rwkv6", "mamba"])
+def test_ssm_scan_equals_stepwise(kind):
+    from repro.configs.base import ModelConfig, SSMConfig
+    d = 128
+    cfg = ModelConfig(name="t", family="ssm", n_layers=1, d_model=d,
+                      n_heads=2, n_kv_heads=2, d_ff=2 * d, vocab_size=64,
+                      ssm=SSMConfig(kind=kind, d_state=8, expand=2, dt_rank=8),
+                      compute_dtype="float32")
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 10, d)) * 0.1
+    if kind == "rwkv6":
+        p = tree_init(SSM.rwkv_time_mix_abstract(cfg), jax.random.PRNGKey(2),
+                      "float32")
+        y_full, _ = SSM.rwkv_time_mix_apply(p, x, cfg)
+        st = {"shift": jnp.zeros((2, d)),
+              "wkv": jnp.zeros((2, d // 64, 64, 64))}
+        step = SSM.rwkv_time_mix_apply
+    else:
+        p = tree_init(SSM.mamba_abstract(cfg), jax.random.PRNGKey(2), "float32")
+        y_full, _ = SSM.mamba_apply(p, x, cfg)
+        st = {"conv": jnp.zeros((2, 3, 2 * d)), "ssm": jnp.zeros((2, 2 * d, 8))}
+        step = SSM.mamba_apply
+    ys = []
+    for t in range(10):
+        yt, st = step(p, x[:, t:t + 1], cfg, state=st)
+        ys.append(yt)
+    np.testing.assert_allclose(np.asarray(y_full),
+                               np.asarray(jnp.concatenate(ys, axis=1)),
+                               atol=1e-4)
+
+
+def test_cell_skip_rules():
+    skips = 0
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for s in SHAPES.values():
+            ok, _ = cell_supported(cfg, s)
+            skips += not ok
+    assert skips == 8  # DESIGN.md §7: exactly 8 skipped cells
+
+
+def test_int8_kv_cache_decode_quality():
+    """HP-MDR exponent-aligned int8 KV cache: top-1 decode agreement with the
+    bf16 cache (worst case: random-init weights)."""
+    cfg0 = smoke_config("deepseek-67b")
+    m0 = Model(cfg0)
+    params = m0.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                              cfg0.vocab_size)
+    _, caches = jax.jit(lambda p, t: m0.prefill(p, t, max_len=32))(params, toks)
+    out0, _ = jax.jit(lambda p, c, t: m0.decode_step(
+        p, c, jnp.int32(16), t))(params, caches, toks[:, -1:])
+    cfg1 = dataclasses.replace(cfg0, kv_cache_int8_scale=8.0)
+    m1 = Model(cfg1)
+    _, caches1 = jax.jit(lambda p, t: m1.prefill(p, t, max_len=32))(params, toks)
+    assert jax.tree.leaves(caches1)[0].dtype in (jnp.int8, jnp.bfloat16)
+    out1, _ = jax.jit(lambda p, c, t: m1.decode_step(
+        p, c, jnp.int32(16), t))(params, caches1, toks[:, -1:])
+    rel = float(jnp.abs(out1 - out0).max()) / float(jnp.abs(out0).max())
+    agree = float(jnp.mean(jnp.argmax(out1, -1) == jnp.argmax(out0, -1)))
+    assert rel < 0.1 and agree == 1.0

@@ -1,0 +1,38 @@
+"""Chunked pipeline (Fig 4) round-trips + fp64 (Miranda-dtype) exact codec."""
+import numpy as np
+import pytest
+
+from repro.ckpt import bitcast_codec as bc
+from repro.core.pipeline import ChunkedRefactorPipeline, ChunkedReconstructPipeline
+from repro.data.fields import gaussian_field
+
+
+@pytest.mark.parametrize("pipelined", [False, True])
+def test_chunked_pipeline_roundtrip(pipelined):
+    x = gaussian_field((48, 48, 48), slope=-2.2, seed=3)
+    p = ChunkedRefactorPipeline(chunk_elems=1 << 15, pipelined=pipelined,
+                                levels=2)
+    blobs = p.refactor(x, "v")
+    assert p.stats.chunks == (48 ** 3) // (1 << 15) + (1 if (48**3) % (1 << 15) else 0)
+    r = ChunkedReconstructPipeline(pipelined=pipelined)
+    xh = r.reconstruct(blobs, tol=1e-4)
+    assert np.abs(xh - x.reshape(-1)).max() <= 1e-4
+
+
+def test_fp64_codec_bit_exact_and_progressive():
+    rng = np.random.default_rng(0)
+    x = (rng.normal(size=4000) * np.exp2(rng.integers(-40, 40, 4000)))
+    assert x.dtype == np.float64
+    r = bc.exact_refactor(x)
+    full, nb_full = bc.exact_retrieve(r, None)
+    assert np.array_equal(full.view(np.uint8), x.view(np.uint8))  # bit exact
+    approx, nb_part = bc.exact_retrieve(r, 1e-3)
+    rel = np.abs(approx - x) / np.maximum(np.abs(x), 1e-300)
+    assert rel.max() <= 1e-3 * 1.01 + 2 ** -20
+    assert nb_part < nb_full  # progressive reads fewer bytes
+
+
+def test_fp64_hi_lo_split_sizes():
+    x = np.ones(1000, np.float64)
+    r = bc.exact_refactor(x)
+    assert r.n_bits == 64 and sum(r.group_planes) == 64

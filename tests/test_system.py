@@ -1,0 +1,118 @@
+"""End-to-end behaviour of the paper's system: refactor -> progressive
+retrieve with guaranteed error control, incrementality, and QoI control."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import refactor as rf
+from repro.core import retrieve as rt
+from repro.core import qoi as qq
+from repro.data.fields import gaussian_field, velocity_field
+
+
+@pytest.fixture(scope="module")
+def field():
+    return gaussian_field((40, 40, 40), slope=-2.2, seed=11)
+
+
+@pytest.fixture(scope="module")
+def refd(field):
+    return rf.refactor_array(field, "v")
+
+
+def test_progressive_guarantee(field, refd):
+    reader = rt.ProgressiveReader(refd)
+    prev_err = np.inf
+    for tol in [1e-1, 1e-2, 1e-3, 1e-4, 1e-5]:
+        xh, bound, _ = reader.retrieve(tol)
+        actual = float(np.abs(xh - field).max())
+        assert actual <= bound, (tol, actual, bound)
+        assert bound <= max(tol, reader.floor_bound() * 1.001)
+        assert actual <= prev_err * (1 + 1e-9)   # monotone improvement
+        prev_err = actual
+
+
+def test_incremental_fetches_are_deltas(field, refd):
+    r1 = rt.ProgressiveReader(refd)
+    r1.retrieve(1e-2)
+    b1 = r1.total_bytes_fetched
+    r1.retrieve(1e-4)
+    b2 = r1.total_bytes_fetched
+    fresh = rt.ProgressiveReader(refd)
+    fresh.retrieve(1e-4)
+    # going straight to 1e-4 costs the same total bytes as stepping through
+    assert b2 == fresh.total_bytes_fetched
+    assert b2 > b1
+
+
+def test_serialization_roundtrip(field, refd):
+    blob = rf.refactored_to_bytes(refd)
+    r2 = rf.refactored_from_bytes(blob)
+    a, _, _ = rt.ProgressiveReader(refd).retrieve(1e-3)
+    b, _, _ = rt.ProgressiveReader(r2).retrieve(1e-3)
+    assert np.array_equal(a, b)
+
+
+def test_relative_tolerance(field, refd):
+    reader = rt.ProgressiveReader(refd)
+    xh, bound, _ = reader.retrieve(1e-3, relative=True)
+    assert np.abs(xh - field).max() <= 1e-3 * refd.data_range
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10 ** 6), st.floats(1e-5, 1e-1))
+def test_guarantee_property(seed, tol):
+    rng = np.random.default_rng(seed)
+    shape = tuple(rng.integers(12, 28, size=2))
+    x = gaussian_field(shape, slope=float(rng.uniform(-3, -1.2)), seed=seed)
+    r = rf.refactor_array(x, "p")
+    xh, bound, _ = rt.ProgressiveReader(r).retrieve(float(tol))
+    assert np.abs(xh - x).max() <= bound
+
+
+# --------------------------------------------------------------------- QoI --
+
+@pytest.mark.parametrize("method,kw", [("cp", {}), ("ma", {}),
+                                       ("mape", {"c": 10.0})])
+def test_qoi_error_control(method, kw):
+    vs = list(velocity_field((24, 24, 24), seed=3))
+    truth = sum(v ** 2 for v in vs)
+    refs = [rf.refactor_array(v, f"v{i}") for i, v in enumerate(vs)]
+    for tau in [1e-2, 1e-4]:
+        readers = [rt.ProgressiveReader(r) for r in refs]
+        res = qq.progressive_qoi_retrieve(readers, qq.V_TOTAL, tau,
+                                          method=method, **kw)
+        actual = float(np.abs(sum(v ** 2 for v in res.values) - truth).max())
+        assert res.converged
+        assert res.tau_estimated <= tau
+        assert actual <= res.tau_estimated + 1e-12  # the paper's Fig-13 chain
+
+
+@pytest.mark.parametrize("kind", ["sum_squares", "magnitude", "product", "linear"])
+def test_qoi_estimators_conservative(kind):
+    rng = np.random.default_rng(4)
+    vs = [rng.normal(size=1000).astype(np.float32) for _ in range(3)]
+    eps = [1e-3, 2e-3, 5e-4]
+    vh = [v + rng.uniform(-e, e, size=v.shape).astype(np.float32)
+          for v, e in zip(vs, eps)]
+    q = qq.QoI(kind, coeffs=(1.0, -2.0, 0.5) if kind == "linear" else None)
+    n = 2 if kind == "product" else 3
+    est = np.asarray(qq.qoi_error_pointwise([jnp.asarray(v) for v in vh[:n]],
+                                            eps[:n], q))
+    actual = np.abs(np.asarray(qq.qoi_value(vs[:n], q))
+                    - np.asarray(qq.qoi_value(vh[:n], q)))
+    assert (actual <= est + 1e-7).all()
+
+
+def test_ma_bitrate_not_worse_than_cp():
+    """The paper's ordering: MA retrieval efficiency >= CP (Tables 2/3)."""
+    vs = list(velocity_field((32, 32, 32), seed=9))
+    refs = [rf.refactor_array(v, f"v{i}") for i, v in enumerate(vs)]
+    bitrates = {}
+    for method in ["cp", "ma"]:
+        readers = [rt.ProgressiveReader(r) for r in refs]
+        res = qq.progressive_qoi_retrieve(readers, qq.V_TOTAL, 5e-4,
+                                          method=method)
+        bitrates[method] = res.bitrate
+    assert bitrates["ma"] <= bitrates["cp"] * 1.05
