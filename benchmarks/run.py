@@ -5,6 +5,8 @@
   Fig 9     pipeline_overlap        Fig 10   weak_scaling
   Fig 11    end_to_end              Tab 2/3 + Fig 12/13/14  qoi_benchmarks
   (ours)    grad_compress_bench     (ours)   roofline (from dry-run JSONs)
+  (ours)    store_serving (cold/warm cache, sessions, bytes-vs-tol; also
+            writes out/benchmarks/store_serving.json)
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--only MODULE] [--quick]
 """
@@ -20,6 +22,7 @@ MODULES = [
     "end_to_end",
     "qoi_benchmarks",
     "grad_compress_bench",
+    "store_serving",
     "roofline",
 ]
 

@@ -1,0 +1,133 @@
+"""Store serving benchmark: the repro.store read path under load.
+
+Measures, on a freshly written on-disk store:
+
+  * cold vs. warm segment-cache retrieval latency (same tolerance),
+  * bytes fetched vs. tolerance curve (the progressive-retrieval value prop:
+    loose tolerances touch a small prefix of the store),
+  * N concurrent sessions served through one RetrievalService — batched
+    (``retrieve_many``, shared vmapped decode) vs. each session alone.
+
+Emits the driver's CSV rows and writes the full result dict to
+``out/benchmarks/store_serving.json`` (same out/-artifact convention as the
+dry-run machinery).
+"""
+from __future__ import annotations
+
+import json
+import shutil
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.data.fields import gaussian_field
+from repro.store import (CachingBackend, DatasetStore, DatasetWriter,
+                         LocalFileBackend, RetrievalService)
+
+REPO = Path(__file__).resolve().parents[1]
+TOLS = [1e-1, 1e-2, 1e-3, 1e-4, 1e-5]
+N_SESSIONS = 4
+
+
+def _open(root: str) -> DatasetStore:
+    return DatasetStore.open(
+        root, backend=CachingBackend(LocalFileBackend(root)))
+
+
+def run(shape=(64, 64, 64), chunk_elems=40000) -> list:
+    lines = []
+    result = {"shape": list(shape), "chunk_elems": chunk_elems}
+    x = gaussian_field(shape, slope=-2.0, seed=7)
+    rng_ = float(x.max() - x.min())
+    root = tempfile.mkdtemp(prefix="store_bench_")
+    try:
+        t0 = time.perf_counter()
+        with DatasetWriter(root, chunk_elems=chunk_elems) as w:
+            entry = w.write("v", x)
+        t_write = time.perf_counter() - t0
+        result["write_s"] = t_write
+        result["stored_bytes"] = entry.stored_bytes
+        result["raw_bytes"] = int(x.nbytes)
+        lines.append(row("store_write", t_write,
+                         f"{x.nbytes / 1e9 / t_write:.4f}GBps"))
+
+        # ---- bytes-vs-tolerance curve (one incremental session, cold) -----
+        store = _open(root)
+        svc = RetrievalService(store)
+        s = svc.open_session()
+        curve = []
+        for tol in TOLS:
+            xh, bound, fetched = s.retrieve("v", tol * rng_)
+            err = float(np.abs(xh - x).max()) / rng_
+            curve.append({"tol": tol, "bytes_total": s.bytes_fetched,
+                          "bytes_delta": fetched, "rel_err": err,
+                          "bound": bound})
+            lines.append(row(f"store_curve_{tol:.0e}", 0.0,
+                             f"bytes={s.bytes_fetched};rel_err={err:.2e}"))
+        result["curve"] = curve
+        result["full_fraction"] = s.bytes_fetched / max(entry.stored_bytes, 1)
+        store.close()
+
+        # ---- cold vs warm cache -------------------------------------------
+        tol = 1e-4 * rng_
+        store = _open(root)
+        svc = RetrievalService(store)
+
+        def cold():
+            store.backend.drop_cache()
+            svc.open_session().retrieve("v", tol)
+
+        def warm():
+            svc.open_session().retrieve("v", tol)
+
+        t_cold = timeit(cold, warmup=1, iters=3)
+        t_warm = timeit(warm, warmup=1, iters=3)
+        st = store.stats().snapshot()
+        result.update(cold_s=t_cold, warm_s=t_warm, backend=st)
+        lines.append(row("store_cold_retrieve", t_cold,
+                         f"hit_rate={st['hit_rate']:.3f}"))
+        lines.append(row("store_warm_retrieve", t_warm,
+                         f"speedup={t_cold / max(t_warm, 1e-9):.2f}x"))
+        store.close()
+
+        # ---- N concurrent sessions: batched vs. one-by-one ----------------
+        # fresh sessions every call: session state is incremental, so reusing
+        # them would time a fully-cached no-op after the first iteration.
+        store = _open(root)
+        svc = RetrievalService(store)
+
+        def serial():
+            for _ in range(N_SESSIONS):
+                svc.open_session().retrieve("v", tol)
+
+        t_serial = timeit(serial, warmup=1, iters=2)
+
+        store2 = _open(root)
+        svc2 = RetrievalService(store2)
+
+        def batched():
+            svc2.retrieve_many([(svc2.open_session(), "v", tol)
+                                for _ in range(N_SESSIONS)])
+
+        t_batch = timeit(batched, warmup=1, iters=2)
+        result.update(n_sessions=N_SESSIONS, sessions_serial_s=t_serial,
+                      sessions_batched_s=t_batch)
+        lines.append(row(f"store_sessions{N_SESSIONS}_serial", t_serial, ""))
+        lines.append(row(f"store_sessions{N_SESSIONS}_batched", t_batch,
+                         f"speedup={t_serial / max(t_batch, 1e-9):.2f}x"))
+        store.close()
+        store2.close()
+
+        out = REPO / "out" / "benchmarks"
+        out.mkdir(parents=True, exist_ok=True)
+        (out / "store_serving.json").write_text(json.dumps(result, indent=1))
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

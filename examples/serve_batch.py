@@ -1,16 +1,14 @@
 """Batched serving: prefill a batch of prompts, decode new tokens with the
-KV cache (GQA or MLA absorbed cache, per --arch smoke config).
+KV cache (GQA or MLA absorbed cache, per --arch smoke config).  The loop
+itself lives in repro.launch.driver (shared with `python -m
+repro.launch.serve`).
 
     PYTHONPATH=src python examples/serve_batch.py --arch qwen2-7b --new-tokens 16
 """
 import argparse
-import time
 
-import jax
-import jax.numpy as jnp
-
-from repro.configs.base import smoke_config, list_archs
-from repro.models.model import Model
+from repro.configs.base import list_archs, smoke_config
+from repro.launch.driver import serve_greedy
 
 
 def main():
@@ -24,46 +22,14 @@ def main():
     cfg = smoke_config(args.arch)
     if cfg.encoder_only:
         raise SystemExit(f"{args.arch} is encoder-only: no decode step")
-    model = Model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    max_len = args.prompt_len + args.new_tokens
+    res = serve_greedy(cfg, args.batch, args.prompt_len, args.new_tokens)
 
-    rng = jax.random.PRNGKey(1)
-    prompts = jax.random.randint(rng, (args.batch, args.prompt_len), 0,
-                                 cfg.vocab_size)
-    vis = None
-    if cfg.cross_attn_period:
-        vis = jax.random.normal(rng, (args.batch, cfg.n_vision_tokens,
-                                      cfg.d_model), jnp.bfloat16)
-
-    prefill = jax.jit(lambda p, t: model.prefill(p, tokens=t,
-                                                 vision_states=vis,
-                                                 max_len=max_len))
-    decode = jax.jit(lambda p, c, i, t: model.decode_step(p, c, i, t,
-                                                          vision_states=vis))
-
-    t0 = time.time()
-    logits, cache = prefill(params, prompts)
-    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-    jax.block_until_ready(tok)
-    t_prefill = time.time() - t0
-
-    generated = [tok]
-    t0 = time.time()
-    for i in range(args.new_tokens - 1):
-        logits, cache = decode(params, cache, jnp.int32(args.prompt_len + i), tok)
-        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-        generated.append(tok)
-    jax.block_until_ready(tok)
-    t_decode = time.time() - t0
-
-    out = jnp.concatenate(generated, axis=1)
     print(f"arch={args.arch}  batch={args.batch}")
-    print(f"prefill {args.prompt_len} toks: {t_prefill * 1e3:.1f} ms "
+    print(f"prefill {args.prompt_len} toks: {res.prefill_s * 1e3:.1f} ms "
           f"(incl. compile)")
     print(f"decode  {args.new_tokens - 1} steps: "
-          f"{t_decode * 1e3 / max(args.new_tokens - 1, 1):.1f} ms/tok")
-    print("generated token ids:\n", out)
+          f"{res.ms_per_token:.1f} ms/tok")
+    print("generated token ids:\n", res.tokens)
 
 
 if __name__ == "__main__":

@@ -20,7 +20,10 @@ SMOKE = ModelConfig(
     d_ff=128, vocab_size=256,
     mla=MLAConfig(q_lora_rank=32, kv_lora_rank=16,
                   qk_nope_dim=16, qk_rope_dim=8, v_head_dim=16),
+    # capacity_factor=4.0 makes cap == T at smoke sizes, so no token is ever
+    # capacity-dropped (each token contributes <= 1 assignment per expert) and
+    # prefill+decode is numerically consistent with the full forward.
     moe=MoEConfig(n_experts=8, top_k=2, d_expert=32, n_shared=1,
-                  first_dense=1, capacity_factor=2.0),
+                  first_dense=1, capacity_factor=4.0),
     compute_dtype="float32",
 )

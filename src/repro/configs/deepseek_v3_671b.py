@@ -22,7 +22,7 @@ SMOKE = ModelConfig(
     mla=MLAConfig(q_lora_rank=32, kv_lora_rank=16,
                   qk_nope_dim=16, qk_rope_dim=8, v_head_dim=16),
     moe=MoEConfig(n_experts=8, top_k=2, d_expert=32, n_shared=1,
-                  first_dense=1, capacity_factor=2.0),
+                  first_dense=1, capacity_factor=4.0),  # drop-free at smoke T
     mtp_depth=1,
     compute_dtype="float32",
 )

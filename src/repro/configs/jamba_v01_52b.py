@@ -21,6 +21,6 @@ SMOKE = ModelConfig(
     ssm=SSMConfig(kind="mamba", d_state=8, expand=2, dt_rank=8,
                   conv_width=4, attn_period=8, attn_offset=4),
     moe=MoEConfig(n_experts=4, top_k=2, d_expert=128, layer_period=2,
-                  capacity_factor=2.0),
+                  capacity_factor=2.0),  # cap == T at smoke T (k/E = 1/2)
     compute_dtype="float32",
 )

@@ -34,6 +34,8 @@ DEFAULT_MAG_BITS = 23  # fp32 path: largest Bm with exact fp32 quantization
 
 def max_exponent(x: jax.Array) -> jax.Array:
     """Return integer e with max|x| <= 2**e (frexp convention), e=0 if x==0."""
+    if x.size == 0:
+        return jnp.zeros((), jnp.int32)
     amax = jnp.max(jnp.abs(x))
     # frexp: amax = m * 2**e with m in [0.5, 1)
     _, e = jnp.frexp(amax)

@@ -66,7 +66,8 @@ def num_levels(shape: Sequence[int], min_size: int = 8, max_levels: int = 6) -> 
 
 
 def _coarse_shape(shape: Sequence[int]) -> Tuple[int, ...]:
-    return tuple((d + 1) // 2 if d > 1 else 1 for d in shape)
+    # d == 0 stays 0 (empty axes stay empty); d == 1 stays 1
+    return tuple((d + 1) // 2 if d > 1 else d for d in shape)
 
 
 def decompose(x: jax.Array, levels: int) -> List[jax.Array]:

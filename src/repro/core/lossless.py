@@ -212,7 +212,13 @@ _MAGIC = 0x4D445253  # 'MDRS'
 
 @dataclasses.dataclass
 class Segment:
-    """One losslessly-encoded unit (a merged bitplane group)."""
+    """One losslessly-encoded unit (a merged bitplane group).
+
+    A Segment may be a payload-free *stub*: metadata only, with the true
+    serialized size recorded in ``meta["stored_bytes"]``.  Stubs are what a
+    store manifest materializes so the retrieval planner can cost byte ranges
+    without ever touching segment payloads (see repro.store.layout).
+    """
     method: str
     n_bytes: int                      # original (uncompressed) byte count
     payload: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
@@ -220,7 +226,13 @@ class Segment:
 
     @property
     def stored_bytes(self) -> int:
+        if "stored_bytes" in self.meta:
+            return int(self.meta["stored_bytes"])
         return sum(a.nbytes for a in self.payload.values()) + 64
+
+    @property
+    def is_stub(self) -> bool:
+        return not self.payload and "stored_bytes" in self.meta
 
     def to_bytes(self) -> bytes:
         parts = [struct.pack("<IIIi", _MAGIC, _METHODS[self.method],

@@ -56,6 +56,63 @@ def _chunk_slices(n: int, chunk: int) -> List[slice]:
     return [slice(i, min(i + chunk, n)) for i in range(0, n, chunk)]
 
 
+def overlap_map(n_items: int,
+                stage1: Callable[[int], object],
+                stage2: Callable[[int, object], object],
+                pipelined: bool = True,
+                depth: int = 1) -> List[object]:
+    """Two-stage overlapped map with the Fig-4 X->I dependency structure.
+
+    ``stage1(i)`` (I/O-bound: fetch/decompress/deserialize) runs on a feeder
+    thread at most ``depth`` items ahead; ``stage2(i, s1)`` (compute-bound:
+    decode/recompose) runs on the calling thread.  Order is preserved and a
+    stage-1 exception is re-raised on the caller.  With ``pipelined=False``
+    the stages run strictly serially (the paper's baseline mode).
+
+    This is the single overlap primitive shared by the chunked reconstruct
+    pipeline and the store retrieval service."""
+    out: List[object] = [None] * n_items
+    if not pipelined or n_items <= 1:
+        for i in range(n_items):
+            out[i] = stage2(i, stage1(i))
+        return out
+
+    ready: "queue.Queue[tuple]" = queue.Queue(maxsize=max(depth, 1))
+    cancel = threading.Event()
+
+    def feeder():
+        for i in range(n_items):
+            if cancel.is_set():
+                break
+            try:
+                ready.put((i, stage1(i), None))
+            except Exception as exc:  # noqa: BLE001 - forwarded to caller
+                ready.put((i, None, exc))
+                return
+        ready.put((-1, None, None))
+
+    threading.Thread(target=feeder, daemon=True).start()
+    while True:
+        i, s1, exc = ready.get()
+        if exc is not None:
+            raise exc  # feeder already exited; nothing left to drain
+        if i < 0:
+            break
+        try:
+            out[i] = stage2(i, s1)
+        except BaseException:
+            # stop the feeder (it runs at most `depth` more stage1 calls)
+            # and drain to its sentinel so the thread exits instead of
+            # leaking parked on the bounded put.
+            cancel.set()
+            while True:
+                j, _, e2 = ready.get()
+                if j < 0 or e2 is not None:
+                    break
+            raise
+    return out
+
+
 class ChunkedRefactorPipeline:
     """Refactor a large (possibly larger-than-device-memory) array in chunks.
 
@@ -67,13 +124,20 @@ class ChunkedRefactorPipeline:
     def __init__(self, chunk_elems: int = 1 << 20, pipelined: bool = True,
                  levels: int = 2, design: str = "register_block",
                  hybrid: ll.HybridConfig = ll.HybridConfig(),
-                 backend: str = "auto"):
+                 backend: str = "auto",
+                 mag_bits: Optional[int] = None,
+                 sink: Optional[Callable[[int, rf.Refactored], bytes]] = None):
         self.chunk_elems = chunk_elems
         self.pipelined = pipelined
         self.levels = levels
         self.design = design
         self.hybrid = hybrid
         self.backend = backend
+        self.mag_bits = mag_bits
+        # sink(chunk_idx, refactored) -> serialized bytes: lets a store writer
+        # address individual segments (repro.store.writer) instead of getting
+        # one opaque blob per chunk.  Chunks reach the sink in index order.
+        self.sink = sink
         self.stats = PipelineStats()
 
     # -- stages ------------------------------------------------------------
@@ -86,15 +150,19 @@ class ChunkedRefactorPipeline:
 
     def _compute(self, dev_chunk: jax.Array, name: str) -> rf.Refactored:
         t0 = time.perf_counter()
+        kw = {} if self.mag_bits is None else {"mag_bits": self.mag_bits}
         out = rf.refactor_array(dev_chunk, name=name, levels=self.levels,
                                 design=self.design, hybrid=self.hybrid,
-                                backend=self.backend)
+                                backend=self.backend, **kw)
         self.stats.compute_s += time.perf_counter() - t0
         return out
 
-    def _copy_out(self, refd: rf.Refactored) -> bytes:
+    def _copy_out(self, ci: int, refd: rf.Refactored) -> bytes:
         t0 = time.perf_counter()
-        blob = rf.refactored_to_bytes(refd)
+        if self.sink is not None:
+            blob = self.sink(ci, refd)
+        else:
+            blob = rf.refactored_to_bytes(refd)
         self.stats.copy_out_s += time.perf_counter() - t0
         return blob
 
@@ -110,38 +178,57 @@ class ChunkedRefactorPipeline:
             for ci, sl in enumerate(slices):
                 dev = self._copy_in(flat[sl])
                 refd = self._compute(dev, f"{name}.{ci}")
-                blobs[ci] = self._copy_out(refd)
+                blobs[ci] = self._copy_out(ci, refd)
         else:
             # Q1: prefetch (H2D), Q3: serialize (D2H); compute on main thread.
             prefetch_q: "queue.Queue[tuple[int, jax.Array]]" = queue.Queue(maxsize=2)
             out_q: "queue.Queue[tuple[int, rf.Refactored]]" = queue.Queue(maxsize=2)
             done = threading.Event()
+            errors: List[BaseException] = []  # worker exceptions, re-raised
 
             def prefetcher():
-                for ci, sl in enumerate(slices):
-                    prefetch_q.put((ci, self._copy_in(flat[sl])))  # S -> I edge via maxsize
+                try:
+                    for ci, sl in enumerate(slices):
+                        prefetch_q.put((ci, self._copy_in(flat[sl])))  # S -> I edge
+                except BaseException as exc:  # noqa: BLE001 - to caller
+                    errors.append(exc)
                 prefetch_q.put((-1, None))
 
             def serializer():
+                # on error, keep draining so the producer never blocks on the
+                # bounded queue (a sink exception must not hang refactor()).
                 while True:
                     item = out_q.get()
                     if item[0] < 0:
                         break
-                    ci, refd = item
-                    blobs[ci] = self._copy_out(refd)
+                    if errors:
+                        continue
+                    try:
+                        blobs[item[0]] = self._copy_out(item[0], item[1])
+                    except BaseException as exc:  # noqa: BLE001 - to caller
+                        errors.append(exc)
                 done.set()
 
             t1 = threading.Thread(target=prefetcher, daemon=True)
             t3 = threading.Thread(target=serializer, daemon=True)
             t1.start(); t3.start()
-            while True:
-                ci, dev = prefetch_q.get()
-                if ci < 0:
-                    break
-                refd = self._compute(dev, f"{name}.{ci}")  # I -> Z honored: input resident
-                out_q.put((ci, refd))                      # O overlaps next compute
+            try:
+                while True:
+                    ci, dev = prefetch_q.get()
+                    if ci < 0:
+                        break
+                    if errors:
+                        continue  # drain the prefetcher; skip further compute
+                    refd = self._compute(dev, f"{name}.{ci}")  # I -> Z honored
+                    out_q.put((ci, refd))                  # O overlaps next compute
+            except BaseException as exc:  # noqa: BLE001 - compute failed
+                errors.append(exc)
+                while ci >= 0:  # release the prefetcher parked on its put
+                    ci, _ = prefetch_q.get()
             out_q.put((-1, None))
             done.wait()
+            if errors:
+                raise errors[0]
 
         self.stats.chunks += len(slices)
         self.stats.bytes_in += flat.nbytes
@@ -176,25 +263,11 @@ class ChunkedReconstructPipeline:
             self.stats.compute_s += time.perf_counter() - t0
             self.stats.bytes_in += fetched
 
-        if not self.pipelined:
-            for ci in range(len(blobs)):
-                recompose(ci, decompress(ci))
-        else:
-            # X -> I edge: the next chunk's deserialization+fetch happens on a
-            # side thread but is released only after this chunk's decompress.
-            ready: "queue.Queue[tuple[int, rtv.ProgressiveReader]]" = queue.Queue(maxsize=1)
-
-            def feeder():
-                for ci in range(len(blobs)):
-                    ready.put((ci, decompress(ci)))
-                ready.put((-1, None))
-
-            threading.Thread(target=feeder, daemon=True).start()
-            while True:
-                ci, reader = ready.get()
-                if ci < 0:
-                    break
-                recompose(ci, reader)
+        # X -> I edge: the next chunk's deserialization+fetch happens on the
+        # overlap_map feeder thread, released only after this chunk's
+        # decompress (queue depth 1).
+        overlap_map(len(blobs), decompress, recompose,
+                    pipelined=self.pipelined)
 
         self.stats.chunks += len(blobs)
         out = np.concatenate([o.reshape(-1) for o in outs])

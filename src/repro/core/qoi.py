@@ -155,8 +155,9 @@ def progressive_qoi_retrieve(
         if tau_p <= tau:
             converged = True
             break
-        at_floor = all(s.groups_fetched >= len(p.groups)
-                       for r in readers for p, s in zip(r.ref.pieces, r.state))
+        # floor = nothing fetchable remains anywhere (peek_best skips pieces
+        # that can't reduce the bound, e.g. empty ones)
+        at_floor = all(r.peek_best()[1] is None for r in readers)
         if at_floor:
             break
         # estimate next data error bounds

@@ -65,6 +65,8 @@ class Refactored:
     # -- error model -------------------------------------------------------
     def piece_eps(self, piece: int, planes_kept: int) -> float:
         pm = self.pieces[piece]
+        if pm.n == 0:
+            return 0.0  # no coefficients -> no truncation error contribution
         return al.truncation_error(pm.exponent, planes_kept, self.mag_bits)
 
     def bound(self, planes_per_piece: Sequence[int]) -> float:
@@ -86,7 +88,7 @@ def refactor_array(
         levels = dc.num_levels(x.shape)
     pieces = dc.decompose(x, levels)
     ndim = x.ndim
-    amax = float(jnp.max(jnp.abs(x)))
+    amax = float(jnp.max(jnp.abs(x))) if x.size else 0.0
     rng = float(jnp.max(x) - jnp.min(x)) if x.size else 0.0
 
     group_planes: List[int] = []
@@ -124,6 +126,81 @@ def refactor_array(
 
 
 # ------------------------------------------------------------ serialization --
+#
+# Two layers, so an on-disk store can address plane groups without
+# re-encoding anything (repro.store.layout):
+#
+#   * ``iter_segments`` / ``Segment.to_bytes`` — the canonical segment stream
+#     (per piece: sign, then MSB-first groups).  A store writes each blob at
+#     its own offset and records (offset, size, method) per segment.
+#   * ``refactored_meta`` / ``refactored_from_meta`` — the payload-free
+#     header.  Rebuilding from it with stub segments yields a ``Refactored``
+#     whose planner sees true stored sizes but holds no payload bytes.
+#
+# ``refactored_to_bytes`` / ``refactored_from_bytes`` (the single-blob wire
+# format used by the pipelines) are thin compositions of the two layers.
+
+
+def iter_segments(r: Refactored):
+    """Yield (piece_idx, kind, group_idx, Segment) in canonical stream order.
+
+    kind is 'sign' (group_idx = -1) or 'group' (group_idx = 0..G-1, MSB
+    first).  This order is shared by ``refactored_to_bytes`` and the store
+    layout, so offsets computed against it address the same bytes."""
+    for pi, p in enumerate(r.pieces):
+        yield pi, "sign", -1, p.sign_seg
+        for gi, g in enumerate(p.groups):
+            yield pi, "group", gi, g
+
+
+def refactored_meta(r: Refactored) -> Dict:
+    """JSON-able payload-free header: everything the retrieval planner and
+    error model need, minus the segment payloads."""
+    return {
+        "name": r.name,
+        "shape": list(r.shape),
+        "levels": r.levels,
+        "design": r.design,
+        "mag_bits": r.mag_bits,
+        "group_size": r.group_size,
+        "amax": r.data_amax,
+        "range": r.data_range,
+        "pieces": [
+            {
+                "n": p.n,
+                "exponent": p.exponent,
+                "weight": p.weight,
+                "n_words": int(p.groups[0].meta.get("n_words", 0))
+                if p.groups else 0,
+                "group_planes": list(p.group_planes),
+            }
+            for p in r.pieces
+        ],
+    }
+
+
+def refactored_from_meta(meta: Dict, segments) -> Refactored:
+    """Rebuild a ``Refactored`` from a payload-free header.
+
+    ``segments(piece_idx, kind, group_idx) -> ll.Segment`` supplies each
+    segment — either a real decoded segment or a stub carrying
+    ``meta["stored_bytes"]`` (see ``ll.Segment.is_stub``)."""
+    pieces = []
+    for pi, pm in enumerate(meta["pieces"]):
+        sign_seg = segments(pi, "sign", -1)
+        groups = [segments(pi, "group", gi)
+                  for gi in range(len(pm["group_planes"]))]
+        pieces.append(PieceMeta(
+            n=int(pm["n"]), exponent=int(pm["exponent"]),
+            weight=float(pm["weight"]), sign_seg=sign_seg, groups=groups,
+            group_planes=[int(g) for g in pm["group_planes"]]))
+    return Refactored(
+        name=meta["name"], shape=tuple(int(s) for s in meta["shape"]),
+        levels=int(meta["levels"]), design=meta["design"],
+        mag_bits=int(meta["mag_bits"]), group_size=int(meta["group_size"]),
+        data_amax=float(meta["amax"]), data_range=float(meta["range"]),
+        pieces=pieces)
+
 
 def refactored_to_bytes(r: Refactored) -> bytes:
     head = {

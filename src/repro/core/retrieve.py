@@ -32,12 +32,50 @@ class _PieceState:
     bytes_fetched: int = 0
 
 
-class ProgressiveReader:
-    """Stateful reader over a ``Refactored`` variable."""
+class SegmentSource:
+    """Where a reader gets segment payloads from.
 
-    def __init__(self, ref: Refactored, backend: str = "auto"):
+    The default ``InlineSegmentSource`` serves the in-memory segments held by
+    the ``Refactored`` itself; a store-backed source (repro.store) resolves
+    (piece, group) to a byte range and fetches exactly that range.  ``sign``
+    and ``group`` must return segments with payloads; ``prefetch`` is an
+    optional hint listing (piece, group) pairs about to be fetched
+    (group == -1 means the piece's sign segment)."""
+
+    def sign(self, piece: int) -> ll.Segment:
+        raise NotImplementedError
+
+    def group(self, piece: int, group: int) -> ll.Segment:
+        raise NotImplementedError
+
+    def prefetch(self, wants: List[Tuple[int, int]]) -> None:
+        pass
+
+
+class InlineSegmentSource(SegmentSource):
+    def __init__(self, ref: Refactored):
+        self._ref = ref
+
+    def sign(self, piece: int) -> ll.Segment:
+        return self._ref.pieces[piece].sign_seg
+
+    def group(self, piece: int, group: int) -> ll.Segment:
+        return self._ref.pieces[piece].groups[group]
+
+
+class ProgressiveReader:
+    """Stateful reader over a ``Refactored`` variable.
+
+    ``ref`` may hold real segments (then the default inline source serves
+    them) or payload-free stubs (then ``source`` must resolve the payloads,
+    e.g. via a store backend).  Planning only ever touches segment *sizes*,
+    so it works identically in both modes."""
+
+    def __init__(self, ref: Refactored, backend: str = "auto",
+                 source: Optional[SegmentSource] = None):
         self.ref = ref
         self.backend = backend
+        self.source = source if source is not None else InlineSegmentSource(ref)
         self.state = [_PieceState() for _ in ref.pieces]
         self.total_bytes_fetched = 0
 
@@ -82,41 +120,65 @@ class ProgressiveReader:
         return groups
 
     # ------------------------------------------------------------ fetching --
+    def pending_deltas(self, target_groups: List[int]) -> List[Tuple[int, int]]:
+        """(piece, group) pairs `_fetch_to(target_groups)` would fetch; the
+        sign segment of a cold piece is listed as (piece, -1)."""
+        wants: List[Tuple[int, int]] = []
+        for i, st in enumerate(self.state):
+            if target_groups[i] <= st.groups_fetched:
+                continue
+            if st.groups_fetched == 0:
+                wants.append((i, -1))
+            wants.extend((i, g) for g in range(st.groups_fetched,
+                                               target_groups[i]))
+        return wants
+
     def _fetch_to(self, target_groups: List[int]) -> int:
-        """Fetch segment deltas; returns bytes fetched now."""
+        """Fetch segment deltas through the source; returns bytes fetched now.
+
+        Byte accounting uses the sizes recorded on ``ref`` (true byte-range
+        lengths for store-backed stubs), so it reflects exactly what moved
+        over the backend."""
+        self.source.prefetch(self.pending_deltas(target_groups))
         fetched = 0
         for i, (pm, st) in enumerate(zip(self.ref.pieces, self.state)):
             tg = target_groups[i]
             if tg <= st.groups_fetched:
                 continue
+            got = 0
             if st.groups_fetched == 0:
-                sign_blob = ll.decompress_group(pm.sign_seg)
+                sign_blob = ll.decompress_group(self.source.sign(i))
                 w = pm.groups[0].meta["n_words"]
                 st.sign = sign_blob.view(np.uint32).reshape(1, w)
-                fetched += pm.sign_seg.stored_bytes
+                got += pm.sign_seg.stored_bytes
             new_rows = []
             for g in range(st.groups_fetched, tg):
-                seg = pm.groups[g]
+                seg = self.source.group(i, g)
                 blob = ll.decompress_group(seg)
                 w = seg.meta["n_words"]
-                new_rows.append(blob.view(np.uint32).reshape(-1, w))
-                fetched += seg.stored_bytes
+                if w:
+                    rows = blob.view(np.uint32).reshape(-1, w)
+                else:  # empty piece: keep the (planes, 0) row structure
+                    rows = np.zeros((pm.group_planes[g], 0), np.uint32)
+                new_rows.append(rows)
+                got += pm.groups[g].stored_bytes
             stack = [st.planes] if st.planes is not None else []
             st.planes = np.concatenate(stack + new_rows, axis=0)
             st.groups_fetched = tg
-            st.bytes_fetched += fetched
+            st.bytes_fetched += got
+            fetched += got
         self.total_bytes_fetched += fetched
         return fetched
 
-    def fetch_one_more_group(self) -> int:
-        """MA primitive: fetch the single best next merged group (greedy by
-        error-reduction-per-byte) — the finest augmentation granularity."""
+    def peek_best(self) -> Tuple[float, Optional[int]]:
+        """(score, piece) of the single best next merged group by
+        error-reduction-per-byte, or (-1.0, None) if everything is fetched."""
         r = self.ref
         kept = self.planes_kept()
         best, best_score = None, -1.0
         for i, pm in enumerate(r.pieces):
             gi = self.state[i].groups_fetched
-            if gi >= len(pm.groups):
+            if gi >= len(pm.groups) or pm.n == 0:
                 continue
             new_kept = kept[i] + pm.group_planes[gi]
             d_eps = pm.weight * (r.piece_eps(i, kept[i]) - r.piece_eps(i, new_kept))
@@ -126,6 +188,12 @@ class ProgressiveReader:
             score = d_eps / max(cost, 1)
             if score > best_score:
                 best, best_score = i, score
+        return best_score, best
+
+    def fetch_one_more_group(self) -> int:
+        """MA primitive: fetch the single best next merged group (greedy by
+        error-reduction-per-byte) — the finest augmentation granularity."""
+        _, best = self.peek_best()
         if best is None:
             return 0
         target = [s.groups_fetched for s in self.state]
@@ -139,7 +207,7 @@ class ProgressiveReader:
         pieces_dec = []
         for pm, st in zip(r.pieces, self.state):
             p_kept = sum(pm.group_planes[:st.groups_fetched])
-            if p_kept == 0:
+            if p_kept == 0 or pm.n == 0:
                 pieces_dec.append(jnp.zeros((pm.n,), jnp.float32))
                 continue
             mag = kops.decode_bitplanes(jnp.asarray(st.planes), r.mag_bits,

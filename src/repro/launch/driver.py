@@ -1,0 +1,78 @@
+"""Shared greedy prefill+decode serving driver.
+
+Both ``examples/serve_batch.py`` and ``repro.launch.serve`` run the same
+loop (jit prefill, argmax, jit single-token decode steps against the cache);
+this module is the single implementation so the two entry points cannot
+drift.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import Model
+
+
+@dataclasses.dataclass
+class ServeResult:
+    tokens: jax.Array          # (B, new_tokens) greedy token ids
+    prefill_s: float           # wall time of the prefill call (incl. compile)
+    decode_s: float            # wall time of all decode steps
+    new_tokens: int
+
+    @property
+    def ms_per_token(self) -> float:
+        return self.decode_s * 1e3 / max(self.new_tokens - 1, 1)
+
+
+def build_inputs(cfg: ModelConfig, batch: int, prompt_len: int,
+                 seed: int = 1) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Random prompt ids (+ vision states when the arch cross-attends)."""
+    rng = jax.random.PRNGKey(seed)
+    prompts = jax.random.randint(rng, (batch, prompt_len), 0, cfg.vocab_size)
+    vis = None
+    if cfg.cross_attn_period:
+        vis = jax.random.normal(rng, (batch, cfg.n_vision_tokens,
+                                      cfg.d_model), jnp.bfloat16)
+    return prompts, vis
+
+
+def serve_greedy(cfg: ModelConfig, batch: int, prompt_len: int,
+                 new_tokens: int, param_seed: int = 0,
+                 input_seed: int = 1) -> ServeResult:
+    """Prefill a batch of prompts, then greedy-decode ``new_tokens`` ids."""
+    if cfg.encoder_only:
+        raise ValueError(f"{cfg.name} is encoder-only: no decode step")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(param_seed))
+    max_len = prompt_len + new_tokens
+    prompts, vis = build_inputs(cfg, batch, prompt_len, seed=input_seed)
+
+    prefill = jax.jit(lambda p, t: model.prefill(p, tokens=t, max_len=max_len,
+                                                 vision_states=vis))
+    decode = jax.jit(lambda p, c, i, t: model.decode_step(p, c, i, t,
+                                                          vision_states=vis))
+
+    t0 = time.time()
+    logits, cache = prefill(params, prompts)
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    jax.block_until_ready(tok)
+    prefill_s = time.time() - t0
+
+    generated = [tok]
+    t0 = time.time()
+    for i in range(new_tokens - 1):
+        logits, cache = decode(params, cache, jnp.int32(prompt_len + i), tok)
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        generated.append(tok)
+    jax.block_until_ready(tok)
+    decode_s = time.time() - t0
+
+    return ServeResult(tokens=jnp.concatenate(generated, axis=1),
+                       prefill_s=prefill_s, decode_s=decode_s,
+                       new_tokens=new_tokens)

@@ -1,18 +1,15 @@
 """Serving launcher: batched prefill + decode with the KV cache
-(GQA / MLA-absorbed / SSM-state / rolling-SWA per arch).
+(GQA / MLA-absorbed / SSM-state / rolling-SWA per arch).  The loop itself
+lives in repro.launch.driver (shared with examples/serve_batch.py).
 
     PYTHONPATH=src python -m repro.launch.serve --arch deepseek-v2-236b \
         --smoke --batch 4 --prompt-len 32 --new-tokens 16 [--kv-int8]
 """
 import argparse
 import dataclasses
-import time
-
-import jax
-import jax.numpy as jnp
 
 from repro.configs.base import get_config, list_archs, smoke_config
-from repro.models.model import Model
+from repro.launch.driver import serve_greedy
 
 
 def main():
@@ -31,34 +28,11 @@ def main():
         raise SystemExit(f"{args.arch} is encoder-only: no decode step")
     if args.kv_int8 and cfg.mla is None and cfg.ssm is None:
         cfg = dataclasses.replace(cfg, kv_cache_int8_scale=8.0)
-    model = Model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    max_len = args.prompt_len + args.new_tokens
-    rng = jax.random.PRNGKey(1)
-    prompts = jax.random.randint(rng, (args.batch, args.prompt_len), 0,
-                                 cfg.vocab_size)
-    vis = None
-    if cfg.cross_attn_period:
-        vis = jax.random.normal(rng, (args.batch, cfg.n_vision_tokens,
-                                      cfg.d_model), jnp.bfloat16)
-    prefill = jax.jit(lambda p, t: model.prefill(p, tokens=t, max_len=max_len,
-                                                 vision_states=vis))
-    decode = jax.jit(lambda p, c, i, t: model.decode_step(p, c, i, t,
-                                                          vision_states=vis))
-    logits, cache = prefill(params, prompts)
-    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
-    t0 = time.time()
-    toks = [tok]
-    for i in range(args.new_tokens - 1):
-        logits, cache = decode(params, cache, jnp.int32(args.prompt_len + i), tok)
-        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
-        toks.append(tok)
-    jax.block_until_ready(tok)
-    dt = time.time() - t0
+    res = serve_greedy(cfg, args.batch, args.prompt_len, args.new_tokens)
+
     print(f"{cfg.name}: {args.new_tokens - 1} decode steps, "
-          f"{dt * 1e3 / max(args.new_tokens - 1, 1):.1f} ms/token "
-          f"(incl. first-call compile)")
-    print(jnp.concatenate(toks, axis=1))
+          f"{res.ms_per_token:.1f} ms/token (incl. first-call compile)")
+    print(res.tokens)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,28 @@
+"""repro.store — persistent progressive data store + retrieval service.
+
+The write path chunks an array through the refactor pipeline and lays the
+losslessly-encoded plane-group segments out on disk with per-(chunk, piece,
+group) byte-range addressing (layout).  The read path opens the manifest
+(metadata only), plans greedy rate allocation against recorded segment
+sizes, and fetches exactly the delta byte ranges through a pluggable,
+caching, prefetching backend — multiplexed over many concurrent sessions by
+the RetrievalService.
+
+    writer.DatasetWriter   refactor_array -> pipeline -> segments + manifest
+    layout.DatasetStore    manifest + byte-range addressing
+    backend.*              local-file / in-memory fetch, LRU cache, prefetch
+    service.RetrievalService   sessions, batched decode, QoI serving
+"""
+from repro.store.backend import (BackendStats, CachingBackend, FetchBackend,
+                                 InMemoryBackend, LocalFileBackend)
+from repro.store.layout import (ChunkEntry, DatasetStore, GroupRef,
+                                Manifest, PieceEntry, VariableEntry)
+from repro.store.service import RetrievalService, StoreSegmentSource
+from repro.store.writer import DatasetWriter
+
+__all__ = [
+    "BackendStats", "CachingBackend", "FetchBackend", "InMemoryBackend",
+    "LocalFileBackend", "ChunkEntry", "DatasetStore", "GroupRef", "Manifest",
+    "PieceEntry", "VariableEntry", "RetrievalService", "StoreSegmentSource",
+    "DatasetWriter",
+]

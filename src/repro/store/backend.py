@@ -1,0 +1,252 @@
+"""Pluggable fetch backends for the progressive store.
+
+A backend serves byte ranges by (key, offset, size), where a key is a
+store-root-relative path (e.g. ``segments/vx.seg``).  Implementations:
+
+* ``LocalFileBackend`` — pread-style range reads from files under a root
+  directory (thread-safe; one file handle per key, lazily opened).
+* ``InMemoryBackend``  — a dict of buffers; the writer's staging target and
+  the zero-I/O test double.
+* ``CachingBackend``   — wraps any backend with an LRU *segment* cache
+  (keyed by exact range) plus an async prefetch queue served by worker
+  threads, with hit/miss/byte accounting.  Concurrent readers of the same
+  range coalesce on one in-flight fetch.
+
+All methods are thread-safe: the RetrievalService multiplexes many sessions
+over one backend.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import io
+import os
+import threading
+from typing import Dict, Optional, Tuple
+
+
+@dataclasses.dataclass
+class BackendStats:
+    """Byte accounting. ``bytes_fetched`` counts only bytes that actually
+    moved from the underlying storage (cache misses + prefetches); cache
+    hits count toward ``bytes_served`` alone."""
+    reads: int = 0
+    bytes_served: int = 0
+    fetches: int = 0
+    bytes_fetched: int = 0
+    cache_hits: int = 0
+    cache_misses: int = 0
+    prefetch_issued: int = 0
+    prefetch_useful: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.cache_hits + self.cache_misses
+        return self.cache_hits / total if total else 0.0
+
+    def snapshot(self) -> Dict[str, float]:
+        return {**dataclasses.asdict(self), "hit_rate": self.hit_rate}
+
+
+class FetchBackend:
+    """Byte-range fetch interface."""
+
+    #: True when read() results are retained (so a warming read on another
+    #: thread makes the subsequent real read cheap). Plain backends discard.
+    caches = False
+
+    def read(self, key: str, offset: int, size: int) -> bytes:
+        raise NotImplementedError
+
+    def size(self, key: str) -> int:
+        raise NotImplementedError
+
+    def prefetch(self, key: str, offset: int, size: int) -> None:
+        pass  # hint only; plain backends ignore it
+
+    def close(self) -> None:
+        pass
+
+
+class LocalFileBackend(FetchBackend):
+    def __init__(self, root: str):
+        self.root = root
+        self._files: Dict[str, io.BufferedReader] = {}
+        self._lock = threading.Lock()
+
+    def _path(self, key: str) -> str:
+        return os.path.join(self.root, key)
+
+    def read(self, key: str, offset: int, size: int) -> bytes:
+        # one pread per call: no shared seek state, safe across threads
+        with self._lock:
+            f = self._files.get(key)
+            if f is None:
+                f = open(self._path(key), "rb")
+                self._files[key] = f
+        data = os.pread(f.fileno(), size, offset)
+        if len(data) != size:
+            raise IOError(f"short read: {key}@{offset}+{size} -> {len(data)}")
+        return data
+
+    def size(self, key: str) -> int:
+        return os.path.getsize(self._path(key))
+
+    def close(self) -> None:
+        with self._lock:
+            for f in self._files.values():
+                f.close()
+            self._files.clear()
+
+
+class InMemoryBackend(FetchBackend):
+    def __init__(self, buffers: Optional[Dict[str, bytes]] = None):
+        self.buffers: Dict[str, bytes] = dict(buffers or {})
+
+    def read(self, key: str, offset: int, size: int) -> bytes:
+        buf = self.buffers[key]
+        if offset + size > len(buf):
+            raise IOError(f"short read: {key}@{offset}+{size}")
+        return bytes(buf[offset:offset + size])
+
+    def size(self, key: str) -> int:
+        return len(self.buffers[key])
+
+
+_Range = Tuple[str, int, int]
+
+
+class CachingBackend(FetchBackend):
+    """LRU segment cache + async prefetch over an inner backend."""
+
+    caches = True
+
+    def __init__(self, inner: FetchBackend, capacity_bytes: int = 64 << 20,
+                 workers: int = 2):
+        self.inner = inner
+        self.capacity_bytes = capacity_bytes
+        self.stats = BackendStats()
+        self._cache: "collections.OrderedDict[_Range, bytes]" = collections.OrderedDict()
+        self._cached_bytes = 0
+        self._lock = threading.Lock()
+        self._inflight: Dict[_Range, threading.Event] = {}
+        self._queue: "collections.deque[_Range]" = collections.deque()
+        self._queue_cv = threading.Condition(self._lock)
+        self._closed = False
+        self._workers = [threading.Thread(target=self._worker, daemon=True)
+                         for _ in range(max(workers, 0))]
+        for w in self._workers:
+            w.start()
+
+    # -- cache mechanics (call with self._lock held) -------------------------
+    def _insert(self, rng: _Range, data: bytes) -> None:
+        if rng in self._cache:
+            return
+        self._cache[rng] = data
+        self._cached_bytes += len(data)
+        while self._cached_bytes > self.capacity_bytes and self._cache:
+            _, old = self._cache.popitem(last=False)
+            self._cached_bytes -= len(old)
+
+    def _lookup(self, rng: _Range) -> Optional[bytes]:
+        data = self._cache.get(rng)
+        if data is not None:
+            self._cache.move_to_end(rng)
+        return data
+
+    # -- fetch path ----------------------------------------------------------
+    def _fetch_into_cache(self, rng: _Range) -> Tuple[bytes, bool]:
+        """Fetch ``rng`` from the inner backend, coalescing with any other
+        thread already fetching the same range.  Returns (data, performed):
+        ``performed`` is True only when THIS call did the inner read."""
+        key, off, size = rng
+        with self._lock:
+            data = self._lookup(rng)
+            if data is not None:
+                return data, False
+            ev = self._inflight.get(rng)
+            if ev is None:
+                ev = threading.Event()
+                self._inflight[rng] = ev
+                owner = True
+            else:
+                owner = False
+        if not owner:
+            ev.wait()
+            with self._lock:
+                data = self._lookup(rng)
+            if data is not None:
+                return data, False
+            # evicted between completion and our lookup: fall through and own
+        try:
+            data = self.inner.read(key, off, size)
+            with self._lock:
+                self.stats.fetches += 1
+                self.stats.bytes_fetched += size
+                self._insert(rng, data)
+        finally:
+            # insert BEFORE waking waiters, so coalesced readers find the
+            # data in cache instead of re-reading the range themselves.
+            if owner:
+                with self._lock:
+                    self._inflight.pop(rng, None)
+                ev.set()
+        return data, True
+
+    def read(self, key: str, offset: int, size: int) -> bytes:
+        rng = (key, offset, size)
+        with self._lock:
+            self.stats.reads += 1
+            self.stats.bytes_served += size
+            data = self._lookup(rng)
+            if data is not None:
+                self.stats.cache_hits += 1
+                return data
+            self.stats.cache_misses += 1
+        return self._fetch_into_cache(rng)[0]
+
+    def size(self, key: str) -> int:
+        return self.inner.size(key)
+
+    # -- prefetch ------------------------------------------------------------
+    def prefetch(self, key: str, offset: int, size: int) -> None:
+        if not self._workers:
+            return
+        rng = (key, offset, size)
+        with self._queue_cv:
+            if self._closed or rng in self._cache or rng in self._inflight:
+                return
+            self.stats.prefetch_issued += 1
+            self._queue.append(rng)
+            self._queue_cv.notify()
+
+    def _worker(self) -> None:
+        while True:
+            with self._queue_cv:
+                while not self._queue and not self._closed:
+                    self._queue_cv.wait()
+                if self._closed:
+                    return
+                rng = self._queue.popleft()
+            try:
+                _, performed = self._fetch_into_cache(rng)
+                if performed:  # the prefetch itself moved the bytes
+                    with self._lock:
+                        self.stats.prefetch_useful += 1
+            except Exception:  # noqa: BLE001 - prefetch is best-effort
+                pass
+
+    def drop_cache(self) -> None:
+        """Forget all cached segments (cold-cache benchmarking)."""
+        with self._lock:
+            self._cache.clear()
+            self._cached_bytes = 0
+
+    def close(self) -> None:
+        with self._queue_cv:
+            self._closed = True
+            self._queue.clear()
+            self._queue_cv.notify_all()
+        for w in self._workers:
+            w.join(timeout=1.0)
+        self.inner.close()

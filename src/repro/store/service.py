@@ -1,0 +1,415 @@
+"""Retrieval service: many concurrent progressive sessions over one store.
+
+Layering (read path)::
+
+    RetrievalService
+      └─ Session (per client; state = groups already shipped per variable)
+           └─ StoreVariableReader (per variable; one ProgressiveReader per
+              stored chunk, fed by StoreSegmentSource byte-range fetches)
+
+Serving a request runs in two stages mapped onto the core pipeline's overlap
+primitive (``core.pipeline.overlap_map``): the feeder thread *warms* the
+backend cache with exactly the delta byte ranges the greedy plan needs
+(I/O), while the caller thread runs lossless decompress + bitplane decode
+(compute).  Bitplane decodes of same-shaped (piece, prefix) states — across
+chunks, variables and sessions — are batched through one vmapped kernel
+call (``reconstruct_many``), which is where multi-session serving wins over
+running each reader alone.
+
+Both max-norm (``Session.retrieve``) and QoI (``Session.retrieve_qoi``)
+requests are incremental: repeating a request with a tighter tolerance
+fetches only the additional plane groups.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import align as al
+from repro.core import decompose as dc
+from repro.core import pipeline as pl
+from repro.core import qoi as qq
+from repro.core.retrieve import ProgressiveReader, SegmentSource
+from repro.kernels import ops as kops
+from repro.store import layout as lo
+
+
+class StoreSegmentSource(SegmentSource):
+    """Resolves (piece, group) to byte-range reads on a store backend."""
+
+    def __init__(self, store: lo.DatasetStore, var: str, chunk: int):
+        self._store = store
+        self._var = var
+        self._pieces = store.variable(var).chunks[chunk].pieces
+
+    def _ref(self, piece: int, group: int) -> lo.GroupRef:
+        p = self._pieces[piece]
+        return p.sign if group < 0 else p.groups[group]
+
+    def sign(self, piece: int):
+        return self._store.read_segment(self._var, self._ref(piece, -1))
+
+    def group(self, piece: int, group: int):
+        return self._store.read_segment(self._var, self._ref(piece, group))
+
+    def prefetch(self, wants: List[Tuple[int, int]]) -> None:
+        for piece, group in wants:
+            self._store.prefetch_segment(self._var, self._ref(piece, group))
+
+    def warm(self, wants: List[Tuple[int, int]]) -> int:
+        """Synchronously pull the ranges into the backend cache (the overlap
+        feeder's I/O stage).  No-op on cache-less backends, where the read
+        would be discarded and the real fetch would re-issue it.  Returns
+        bytes read."""
+        if not getattr(self._store.backend, "caches", False):
+            return 0
+        total = 0
+        for piece, group in wants:
+            ref_ = self._ref(piece, group)
+            self._store.backend.read(self._store.variable(self._var).segment_file,
+                                     ref_.offset, ref_.size)
+            total += ref_.size
+        return total
+
+
+# ------------------------------------------------------------ batched decode --
+
+def reconstruct_many(readers: Sequence[ProgressiveReader],
+                     backend: str = "auto") -> List[Tuple[np.ndarray, float]]:
+    """Decode + recompose many readers, batching same-shaped piece decodes.
+
+    Pieces whose fetched state agrees in (rows, words, n, planes_kept,
+    mag_bits, design) — e.g. the same piece index of equal-sized chunks, or
+    the same variable requested by different sessions — are stacked and
+    decoded by ONE vmapped bitplane-decode/align-decode call instead of
+    len(batch) separate kernel launches.  Returns [(array, bound)] aligned
+    with ``readers``."""
+    jobs: Dict[tuple, List[Tuple[int, int]]] = {}
+    for ri, r in enumerate(readers):
+        for pi, (pm, st) in enumerate(zip(r.ref.pieces, r.state)):
+            p_kept = sum(pm.group_planes[:st.groups_fetched])
+            if p_kept == 0 or pm.n == 0:
+                continue
+            key = (int(st.planes.shape[0]), int(st.planes.shape[1]), pm.n,
+                   p_kept, r.ref.mag_bits, r.ref.design)
+            jobs.setdefault(key, []).append((ri, pi))
+
+    decoded: Dict[Tuple[int, int], jax.Array] = {}
+    for key, items in jobs.items():
+        _, _, n, p_kept, mag_bits, design = key
+        planes = jnp.asarray(np.stack(
+            [readers[ri].state[pi].planes for ri, pi in items]))
+        signs = jnp.asarray(np.stack(
+            [readers[ri].state[pi].sign for ri, pi in items]))
+        es = jnp.asarray([readers[ri].ref.pieces[pi].exponent
+                          for ri, pi in items], jnp.int32)
+        if len(items) == 1:
+            mags = kops.decode_bitplanes(planes[0], mag_bits, n, design,
+                                         backend=backend)[None]
+            sgs = kops.decode_bitplanes(signs[0], 1, n, design,
+                                        backend=backend)[None]
+        else:
+            mags = jax.vmap(lambda p: kops.decode_bitplanes(
+                p, mag_bits, n, design, backend=backend))(planes)
+            sgs = jax.vmap(lambda s: kops.decode_bitplanes(
+                s, 1, n, design, backend=backend))(signs)
+        xs = jax.vmap(lambda m, s, e: al.align_decode(
+            m, s, e, mag_bits, planes_kept=p_kept))(mags, sgs, es)
+        for j, (ri, pi) in enumerate(items):
+            decoded[(ri, pi)] = xs[j]
+
+    outs: List[Tuple[np.ndarray, float]] = []
+    for ri, r in enumerate(readers):
+        pieces_dec = []
+        for pi, pm in enumerate(r.ref.pieces):
+            arr = decoded.get((ri, pi))
+            pieces_dec.append(arr if arr is not None
+                              else jnp.zeros((pm.n,), jnp.float32))
+        out = dc.recompose(pieces_dec, r.ref.shape, r.ref.levels)
+        outs.append((np.asarray(out), r.current_bound()))
+    return outs
+
+
+# ------------------------------------------------------------ variable reader --
+
+class _VarRef:
+    """Facade matching the slice of ``Refactored`` the QoI loop touches."""
+
+    def __init__(self, var: lo.VariableEntry, readers: List[ProgressiveReader]):
+        self.data_amax = var.amax
+        self.data_range = var.range
+        self.shape = var.shape
+        self.n_elements = var.n_elements
+        self.pieces = [pm for r in readers for pm in r.ref.pieces]
+
+
+class StoreVariableReader:
+    """Progressive reader over one stored (possibly chunked) variable.
+
+    Chunk states are independent (each chunk was refactored separately), so
+    the variable-level bound is the max over chunk bounds and a tolerance
+    request maps to the same tolerance per chunk."""
+
+    def __init__(self, store: lo.DatasetStore, name: str,
+                 backend: str = "auto"):
+        var = store.variable(name)
+        self.var = var
+        self.name = name
+        self.backend = backend
+        self.chunk_readers = [
+            ProgressiveReader(lo.chunk_refactored(var, ci), backend=backend,
+                              source=StoreSegmentSource(store, name, ci))
+            for ci in range(len(var.chunks))]
+        self.ref = _VarRef(var, self.chunk_readers)
+        # per-chunk decode cache [(sig, x, bound) | None] + assembled cache
+        self._chunk_recon: List[Optional[Tuple[tuple, np.ndarray, float]]] = \
+            [None] * len(self.chunk_readers)
+        self._recon: Optional[Tuple[tuple, np.ndarray, float]] = None
+
+    # -- QoI-loop surface ----------------------------------------------------
+    @property
+    def state(self):
+        return [s for r in self.chunk_readers for s in r.state]
+
+    @property
+    def total_bytes_fetched(self) -> int:
+        return sum(r.total_bytes_fetched for r in self.chunk_readers)
+
+    def current_bound(self) -> float:
+        return max((r.current_bound() for r in self.chunk_readers), default=0.0)
+
+    def floor_bound(self) -> float:
+        return max((r.floor_bound() for r in self.chunk_readers), default=0.0)
+
+    def peek_best(self) -> Tuple[float, Optional[Tuple[int, int]]]:
+        best_score, best = -1.0, None
+        for ci, r in enumerate(self.chunk_readers):
+            score, piece = r.peek_best()
+            if piece is not None and score > best_score:
+                best_score, best = score, (ci, piece)
+        return best_score, best
+
+    def fetch_one_more_group(self) -> int:
+        _, best = self.peek_best()
+        if best is None:
+            return 0
+        ci, piece = best
+        r = self.chunk_readers[ci]
+        target = [s.groups_fetched for s in r.state]
+        target[piece] += 1
+        return r._fetch_to(target)
+
+    # -- retrieval -----------------------------------------------------------
+    def _assemble(self, outs: List[Tuple[np.ndarray, float]]
+                  ) -> Tuple[np.ndarray, float]:
+        if not outs:
+            return np.zeros(self.var.shape, np.float32), 0.0
+        flat = np.concatenate([o[0].reshape(-1) for o in outs])
+        return flat.reshape(self.var.shape), max(o[1] for o in outs)
+
+    # Reconstructions are cached at two levels, keyed on fetch signatures:
+    # per chunk (an incremental fetch touching one chunk re-decodes only that
+    # chunk) and assembled (a request at an already-met tolerance is O(1)).
+    # Returned arrays are shared — treat as read-only.
+    def _signature(self) -> tuple:
+        return tuple(s.groups_fetched
+                     for r in self.chunk_readers for s in r.state)
+
+    def _chunk_sig(self, ci: int) -> tuple:
+        return tuple(s.groups_fetched for s in self.chunk_readers[ci].state)
+
+    def stale_chunks(self) -> List[int]:
+        return [ci for ci in range(len(self.chunk_readers))
+                if self._chunk_recon[ci] is None
+                or self._chunk_recon[ci][0] != self._chunk_sig(ci)]
+
+    def _store_chunk(self, ci: int, out: Tuple[np.ndarray, float]) -> None:
+        self._chunk_recon[ci] = (self._chunk_sig(ci), out[0], out[1])
+
+    def reconstruct(self) -> Tuple[np.ndarray, float]:
+        sig = self._signature()
+        if self._recon is not None and self._recon[0] == sig:
+            return self._recon[1], self._recon[2]
+        stale = self.stale_chunks()
+        if stale:
+            outs = reconstruct_many([self.chunk_readers[ci] for ci in stale],
+                                    self.backend)
+            for ci, out in zip(stale, outs):
+                self._store_chunk(ci, out)
+        x, bound = self._assemble([(c[1], c[2]) for c in self._chunk_recon])
+        self._recon = (sig, x, bound)
+        return x, bound
+
+    def retrieve(self, tol: float, relative: bool = False
+                 ) -> Tuple[np.ndarray, float, int]:
+        if relative:
+            tol = tol * self.var.range
+        fetched = _warm_and_fetch([(r, r.plan(tol)) for r in self.chunk_readers])
+        x, bound = self.reconstruct()
+        return x, bound, fetched
+
+
+def _warm_and_fetch(plans: List[Tuple[ProgressiveReader, List[int]]]) -> int:
+    """Overlapped fetch of many chunk plans: backend I/O (cache warming) on
+    the feeder thread, lossless decompress on the caller thread."""
+    def warm(i: int):
+        r, target = plans[i]
+        wants = r.pending_deltas(target)
+        if wants and hasattr(r.source, "warm"):
+            r.source.warm(wants)
+        return target
+
+    def fetch(i: int, target) -> int:
+        return plans[i][0]._fetch_to(target)
+
+    return sum(pl.overlap_map(len(plans), warm, fetch, depth=2))
+
+
+# ---------------------------------------------------------------- sessions --
+
+@dataclasses.dataclass
+class SessionStats:
+    requests: int = 0
+    bytes_fetched: int = 0
+    qoi_iterations: int = 0
+
+
+class Session:
+    """One client's progressive state over the store (thread-confined; take
+    ``Session.lock`` when driving one session from several threads)."""
+
+    def __init__(self, service: "RetrievalService", sid: int):
+        self.service = service
+        self.sid = sid
+        self.lock = threading.Lock()
+        self.stats = SessionStats()
+        self._readers: Dict[str, StoreVariableReader] = {}
+
+    def reader(self, var: str) -> StoreVariableReader:
+        r = self._readers.get(var)
+        if r is None:
+            r = StoreVariableReader(self.service.store, var,
+                                    self.service.backend)
+            self._readers[var] = r
+        return r
+
+    @property
+    def bytes_fetched(self) -> int:
+        return sum(r.total_bytes_fetched for r in self._readers.values())
+
+    def retrieve(self, var: str, tol: float, relative: bool = False
+                 ) -> Tuple[np.ndarray, float, int]:
+        """Progressive max-norm retrieval; incremental across calls."""
+        r = self.reader(var)
+        x, bound, fetched = r.retrieve(tol, relative=relative)
+        self.stats.requests += 1
+        self.stats.bytes_fetched += fetched
+        return x, bound, fetched
+
+    def retrieve_qoi(self, variables: Sequence[str], q: qq.QoI, tau: float,
+                     method: str = "mape", **kw) -> qq.QoIRetrievalResult:
+        """Guaranteed-QoI retrieval (Algorithm 3) over store-backed readers;
+        session state persists, so tightening tau is incremental too."""
+        readers = [self.reader(v) for v in variables]
+        before = sum(r.total_bytes_fetched for r in readers)
+        res = qq.progressive_qoi_retrieve(readers, q, tau, method=method, **kw)
+        self.stats.requests += 1
+        self.stats.qoi_iterations += res.iterations
+        self.stats.bytes_fetched += sum(
+            r.total_bytes_fetched for r in readers) - before
+        return res
+
+
+class RetrievalService:
+    """Multiplexes concurrent progressive-retrieval sessions over one store."""
+
+    def __init__(self, store: lo.DatasetStore, backend: str = "auto"):
+        self.store = store
+        self.backend = backend
+        self._sessions: Dict[int, Session] = {}
+        self._ids = itertools.count(1)
+        self._lock = threading.Lock()
+
+    # -- session management --------------------------------------------------
+    def open_session(self) -> Session:
+        with self._lock:
+            sid = next(self._ids)
+            s = Session(self, sid)
+            self._sessions[sid] = s
+            return s
+
+    def close_session(self, session: Session) -> None:
+        with self._lock:
+            self._sessions.pop(session.sid, None)
+
+    @property
+    def sessions(self) -> List[Session]:
+        with self._lock:
+            return list(self._sessions.values())
+
+    # -- batched serving -----------------------------------------------------
+    def retrieve_many(self, requests: Sequence[Tuple[Session, str, float]]
+                      ) -> List[Tuple[np.ndarray, float, int]]:
+        """Serve several (session, var, tol) requests in one batch.
+
+        All requests' delta ranges are fetched through one overlapped pass,
+        then every stale chunk of every distinct reader is decoded in one
+        ``reconstruct_many`` call — same-shaped groups across sessions share
+        kernel launches.  Duplicate (session, var) pairs in one batch share
+        state: all get the (tightest) result, the fetched-byte delta is
+        attributed to the first occurrence."""
+        uniq: Dict[int, dict] = {}  # id(reader) -> accounting entry
+        req_entries: List[Tuple[dict, bool]] = []
+        # one plan per distinct chunk reader (elementwise max over duplicate
+        # requests), so the overlapped fetch never touches a reader twice
+        plan_map: Dict[int, Tuple[ProgressiveReader, List[int]]] = {}
+        for session, var, tol in requests:
+            vr = session.reader(var)
+            ent = uniq.get(id(vr))
+            first = ent is None
+            if first:
+                ent = {"session": session, "vr": vr,
+                       "before": vr.total_bytes_fetched}
+                uniq[id(vr)] = ent
+            req_entries.append((ent, first))
+            for r in vr.chunk_readers:
+                target = r.plan(tol)
+                prev = plan_map.get(id(r))
+                if prev is not None:
+                    target = [max(a, b) for a, b in zip(prev[1], target)]
+                plan_map[id(r)] = (r, target)
+        _warm_and_fetch(list(plan_map.values()))
+        # one batched decode over every stale chunk of every distinct reader
+        stale_pairs = [(ent["vr"], ci) for ent in uniq.values()
+                       for ci in ent["vr"].stale_chunks()]
+        outs = reconstruct_many([vr.chunk_readers[ci]
+                                 for vr, ci in stale_pairs], self.backend)
+        for (vr, ci), out in zip(stale_pairs, outs):
+            vr._store_chunk(ci, out)
+        results = []
+        for ent, first in req_entries:
+            vr = ent["vr"]
+            x, bound = vr.reconstruct()  # cache hit: decoded above
+            fetched = (vr.total_bytes_fetched - ent["before"]) if first else 0
+            ent["session"].stats.requests += 1
+            ent["session"].stats.bytes_fetched += fetched
+            results.append((x, bound, fetched))
+        return results
+
+    # -- accounting ----------------------------------------------------------
+    def stats(self) -> Dict[str, object]:
+        backend_stats = self.store.stats()
+        with self._lock:
+            per_session = {s.sid: dataclasses.asdict(s.stats)
+                           for s in self._sessions.values()}
+        return {
+            "store_bytes": self.store.stored_bytes,
+            "backend": backend_stats.snapshot() if backend_stats else None,
+            "sessions": per_session,
+        }

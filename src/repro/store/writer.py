@@ -1,0 +1,155 @@
+"""Chunked dataset writer: arrays -> refactor pipeline -> addressable store.
+
+``DatasetWriter`` drives ``core.refactor.refactor_array`` through the
+``ChunkedRefactorPipeline`` (copy/compute/serialize overlap) with a custom
+sink that appends each chunk's segments to the variable's segment file and
+records their byte ranges — so writing a larger-than-memory array streams
+chunk by chunk and never holds more than the pipeline's queue depth.
+
+The manifest is written atomically (tmp + rename) on ``finalize()``/context
+exit, so a crashed write never leaves a store that parses but dangles.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core import align as al
+from repro.core import decompose as dc
+from repro.core import lossless as ll
+from repro.core import pipeline as pl
+from repro.core import refactor as rf
+from repro.store import layout as lo
+
+
+class _SegmentFileWriter:
+    """Appending writer for one variable's segment file."""
+
+    def __init__(self, path: str):
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        self._f = open(path, "wb")
+        self._off = 0
+
+    def write(self, blob: bytes) -> int:
+        off = self._off
+        self._f.write(blob)
+        self._off += len(blob)
+        return off
+
+    def close(self) -> None:
+        self._f.flush()
+        self._f.close()
+
+
+class DatasetWriter:
+    """Write variables into a progressive store directory.
+
+        with DatasetWriter("/data/run42", chunk_elems=1 << 20) as w:
+            w.write("vx", vx)
+            w.write("vy", vy)
+        store = DatasetStore.open("/data/run42")
+
+    One variable = one segment file; chunks, pieces and plane groups land at
+    recorded offsets.  ``levels=None`` picks the decomposition depth from the
+    (flattened) chunk length per variable.
+    """
+
+    def __init__(self, root: str, chunk_elems: int = 1 << 20,
+                 levels: Optional[int] = None,
+                 design: str = "register_block",
+                 mag_bits: Optional[int] = None,
+                 hybrid: ll.HybridConfig = ll.HybridConfig(),
+                 pipelined: bool = True, backend: str = "auto"):
+        self.root = root
+        self.chunk_elems = int(chunk_elems)
+        self.levels = levels
+        self.design = design
+        self.mag_bits = mag_bits
+        self.hybrid = hybrid
+        self.pipelined = pipelined
+        self.backend = backend
+        self._finalized = False
+        self._written: set = set()
+        os.makedirs(root, exist_ok=True)
+        # start from the committed manifest (if any), so writing into an
+        # existing store adds/replaces variables instead of dropping the rest
+        committed = os.path.join(root, lo.MANIFEST_NAME)
+        if os.path.exists(committed):
+            with open(committed) as f:
+                self.manifest = lo.Manifest.from_json(json.load(f))
+        else:
+            self.manifest = lo.Manifest()
+
+    # ------------------------------------------------------------- writing --
+    def write(self, name: str, x: np.ndarray) -> lo.VariableEntry:
+        if self._finalized:
+            raise RuntimeError("writer already finalized")
+        if name in self._written:
+            raise ValueError(f"variable {name!r} already written")
+        # a name only present in the committed manifest is a REWRITE: the new
+        # generation replaces it when finalize() commits
+        if "/" in name or name.startswith("."):
+            raise ValueError(f"invalid variable name {name!r}")
+        x = np.asarray(x, dtype=np.float32)
+        shape = tuple(int(s) for s in x.shape)
+        # NB: ascontiguousarray promotes 0-d to 1-d, hence shape captured first
+        flat = np.ascontiguousarray(x).reshape(-1)
+        levels = self.levels
+        if levels is None:
+            levels = dc.num_levels((min(self.chunk_elems, max(flat.size, 1)),))
+        chunks: List[lo.ChunkEntry] = []
+        # per-write generation token: rewriting an existing store never
+        # truncates a file the currently-committed manifest addresses
+        seg_key = lo.segment_key(name, generation=os.urandom(4).hex())
+        seg_writer = _SegmentFileWriter(lo.segment_path(self.root, seg_key))
+
+        def sink(ci: int, refd: rf.Refactored) -> bytes:
+            # chunks reach the sink in index order (pipeline contract), so
+            # append order == chunk order and offsets are deterministic.
+            chunks.append(lo.chunk_entry_from_refactored(refd, seg_writer.write))
+            return b""  # the pipeline's blob list is unused on this path
+
+        pipe = pl.ChunkedRefactorPipeline(
+            chunk_elems=self.chunk_elems, pipelined=self.pipelined,
+            levels=levels, design=self.design, hybrid=self.hybrid,
+            backend=self.backend, mag_bits=self.mag_bits, sink=sink)
+        try:
+            pipe.refactor(flat, name=name)
+        finally:
+            seg_writer.close()
+
+        entry = lo.VariableEntry(
+            name=name, shape=shape, levels=levels,
+            design=self.design,
+            mag_bits=self.mag_bits if self.mag_bits is not None
+            else al.DEFAULT_MAG_BITS,
+            group_size=self.hybrid.group_size, chunk_elems=self.chunk_elems,
+            segment_file=seg_key,
+            amax=float(np.abs(x).max()) if x.size else 0.0,
+            range=float(x.max() - x.min()) if x.size else 0.0,
+            chunks=chunks)
+        self.manifest.variables[name] = entry
+        self._written.add(name)
+        return entry
+
+    # ----------------------------------------------------------- finalize --
+    def finalize(self) -> str:
+        if self._finalized:
+            return os.path.join(self.root, lo.MANIFEST_NAME)
+        path = os.path.join(self.root, lo.MANIFEST_NAME)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(self.manifest.to_json(), f)
+        os.replace(tmp, path)
+        self._finalized = True
+        return path
+
+    def __enter__(self) -> "DatasetWriter":
+        return self
+
+    def __exit__(self, exc_type, *exc) -> None:
+        if exc_type is None:
+            self.finalize()

@@ -1,0 +1,123 @@
+"""Minimal stand-in for the ``hypothesis`` package (used only when the real
+library is not installed — see conftest.py).
+
+Implements the tiny surface the test-suite uses: ``@given`` over
+``integers`` / ``floats`` / ``binary`` / ``sampled_from`` strategies and a
+``@settings(max_examples=..., deadline=...)`` decorator.  Examples are drawn
+deterministically (fixed seed sequence); example 0 pins every strategy to its
+minimum and example 1 to its maximum so boundary cases are always exercised.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 20
+_SEED = 0x48595053  # 'HYPS'
+
+
+class SearchStrategy:
+    def example(self, rng: np.random.Generator, mode: str) -> Any:
+        raise NotImplementedError
+
+
+class _Integers(SearchStrategy):
+    def __init__(self, lo: int, hi: int):
+        self.lo, self.hi = int(lo), int(hi)
+
+    def example(self, rng, mode):
+        if mode == "min":
+            return self.lo
+        if mode == "max":
+            return self.hi
+        return int(rng.integers(self.lo, self.hi + 1))
+
+
+class _Floats(SearchStrategy):
+    def __init__(self, lo: float, hi: float):
+        self.lo, self.hi = float(lo), float(hi)
+
+    def example(self, rng, mode):
+        if mode == "min":
+            return self.lo
+        if mode == "max":
+            return self.hi
+        return float(rng.uniform(self.lo, self.hi))
+
+
+class _Binary(SearchStrategy):
+    def __init__(self, min_size: int = 0, max_size: int = 2 ** 16):
+        self.min_size, self.max_size = int(min_size), int(max_size)
+
+    def example(self, rng, mode):
+        if mode == "min":
+            n = self.min_size
+        elif mode == "max":
+            n = self.max_size
+        else:
+            n = int(rng.integers(self.min_size, self.max_size + 1))
+        return rng.integers(0, 256, n, dtype=np.uint8).tobytes()
+
+
+class _SampledFrom(SearchStrategy):
+    def __init__(self, elements: Sequence[Any]):
+        self.elements = list(elements)
+
+    def example(self, rng, mode):
+        if mode == "min":
+            return self.elements[0]
+        if mode == "max":
+            return self.elements[-1]
+        return self.elements[int(rng.integers(len(self.elements)))]
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> SearchStrategy:
+        return _Integers(min_value, max_value)
+
+    @staticmethod
+    def floats(min_value: float, max_value: float, **_kw) -> SearchStrategy:
+        return _Floats(min_value, max_value)
+
+    @staticmethod
+    def binary(min_size: int = 0, max_size: int = 2 ** 16) -> SearchStrategy:
+        return _Binary(min_size, max_size)
+
+    @staticmethod
+    def sampled_from(elements: Sequence[Any]) -> SearchStrategy:
+        return _SampledFrom(elements)
+
+
+def given(*strats: SearchStrategy) -> Callable:
+    def deco(fn: Callable) -> Callable:
+        # NB: no functools.wraps — the wrapper must present a ZERO-arg
+        # signature or pytest would try to resolve the drawn args as fixtures.
+        def wrapper():
+            n = getattr(wrapper, "_hyp_max_examples", DEFAULT_MAX_EXAMPLES)
+            for i in range(n):
+                mode = "min" if i == 0 else ("max" if i == 1 else "rand")
+                rng = np.random.default_rng(_SEED + i)
+                drawn = tuple(s.example(rng, mode) for s in strats)
+                try:
+                    fn(*drawn)
+                except Exception as exc:  # noqa: BLE001 - re-raise w/ context
+                    raise AssertionError(
+                        f"falsifying example (#{i}): {drawn!r}") from exc
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper._hyp_max_examples = getattr(fn, "_hyp_max_examples",
+                                            DEFAULT_MAX_EXAMPLES)
+        wrapper._hyp_given = True
+        return wrapper
+    return deco
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    def deco(fn: Callable) -> Callable:
+        fn._hyp_max_examples = max_examples
+        return fn
+    return deco

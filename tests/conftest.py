@@ -5,6 +5,15 @@ import textwrap
 
 import pytest
 
+# The container has no `hypothesis`; fall back to the minimal deterministic
+# shim in tests/_shims (same @given/@settings/strategies surface).  conftest
+# is imported before any test module, so the path is in place in time.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                    "_shims"))
+
 # NOTE: no XLA_FLAGS here on purpose — unit/smoke tests must see the real
 # (single) device.  Multi-device tests spawn subprocesses via `run_devices`.
 

@@ -1,0 +1,106 @@
+"""Round-trip property tests for the Refactored serialization layers:
+single-blob wire format, payload-free meta + segment stream, and degenerate
+shapes (0-d, empty, single-element)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import lossless as ll
+from repro.core import refactor as rf
+from repro.core import retrieve as rt
+
+DESIGNS = ["register_block", "locality", "shuffle"]
+
+
+def _random_array(rng: np.random.Generator):
+    ndim = int(rng.integers(0, 4))
+    if ndim == 0:
+        return rng.normal(size=()).astype(np.float32)
+    # include degenerate axes (0 and 1) with small probability
+    dims = [int(d) for d in rng.integers(0, 18, size=ndim)]
+    if rng.uniform() < 0.7:
+        dims = [max(d, 2) for d in dims]
+    x = np.zeros(tuple(dims), np.float32)
+    if x.size:
+        x = (rng.normal(size=x.shape)
+             * 10.0 ** float(rng.integers(-4, 5))).astype(np.float32)
+    return x
+
+
+def _assert_equivalent(r: rf.Refactored, r2: rf.Refactored):
+    a, ba, _ = rt.ProgressiveReader(r).retrieve(1e-3)
+    b, bb, _ = rt.ProgressiveReader(r2).retrieve(1e-3)
+    assert np.array_equal(a, b)
+    assert ba == bb
+    assert r2.shape == r.shape and r2.levels == r.levels
+    assert r2.design == r.design and r2.mag_bits == r.mag_bits
+    assert r2.data_amax == r.data_amax and r2.data_range == r.data_range
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10 ** 6), st.sampled_from(DESIGNS),
+       st.integers(1, 4))
+def test_to_bytes_roundtrip_property(seed, design, levels):
+    rng = np.random.default_rng(seed)
+    x = _random_array(rng)
+    r = rf.refactor_array(x, "t", levels=levels, design=design)
+    r2 = rf.refactored_from_bytes(rf.refactored_to_bytes(r))
+    _assert_equivalent(r, r2)
+    if x.size:
+        reader = rt.ProgressiveReader(r2)
+        xh, bound, _ = reader.retrieve(1e-3)
+        assert np.abs(xh - x).max() <= bound
+        # large-amplitude data may floor above the requested tolerance
+        assert bound <= max(1e-3, reader.floor_bound() * 1.001)
+
+
+@pytest.mark.parametrize("shape", [(), (1,), (0,), (3, 0), (1, 1), (2,),
+                                   (1, 5, 1)])
+def test_degenerate_shapes_roundtrip(shape):
+    rng = np.random.default_rng(1)
+    n = int(np.prod(shape, dtype=int))
+    x = rng.normal(size=shape).astype(np.float32) if n \
+        else np.zeros(shape, np.float32)
+    r = rf.refactor_array(x, "t")
+    r2 = rf.refactored_from_bytes(rf.refactored_to_bytes(r))
+    _assert_equivalent(r, r2)
+    xh, bound, _ = rt.ProgressiveReader(r2).retrieve(1e-4)
+    assert xh.shape == shape
+    if n:
+        assert np.abs(xh - x).max() <= bound <= 1e-4
+
+
+def test_meta_plus_segments_equals_wire_format():
+    """The factored layers (meta + canonical segment stream) reproduce the
+    exact reader behavior of the single-blob format."""
+    x = np.random.default_rng(7).normal(size=(30, 30)).astype(np.float32)
+    r = rf.refactor_array(x, "t", levels=2)
+    meta = rf.refactored_meta(r)
+    segs = {(pi, kind, gi): ll.Segment.from_bytes(seg.to_bytes())
+            for pi, kind, gi, seg in rf.iter_segments(r)}
+
+    def lookup(pi, kind, gi):
+        return segs[(pi, kind, gi)]
+
+    r2 = rf.refactored_from_meta(meta, lookup)
+    _assert_equivalent(r, r2)
+
+
+def test_stub_refactored_plans_like_real():
+    """Payload-free stubs (store manifests) must produce the identical greedy
+    plan, since planning only reads sizes and the error model."""
+    x = np.random.default_rng(3).normal(size=(24, 24)).astype(np.float32)
+    r = rf.refactor_array(x, "t", levels=2)
+    meta = rf.refactored_meta(r)
+
+    def stub(pi, kind, gi):
+        seg = (r.pieces[pi].sign_seg if kind == "sign"
+               else r.pieces[pi].groups[gi])
+        return ll.Segment(seg.method, 0, payload={},
+                          meta={"stored_bytes": seg.stored_bytes,
+                                **{k: v for k, v in seg.meta.items()}})
+
+    r2 = rf.refactored_from_meta(meta, stub)
+    for tol in [1e-1, 1e-3, 1e-5]:
+        assert (rt.ProgressiveReader(r).plan(tol)
+                == rt.ProgressiveReader(r2).plan(tol)), tol

@@ -1,0 +1,243 @@
+"""Progressive store + retrieval service: on-disk layout, byte-range
+addressing, caching backend accounting, concurrent sessions, QoI serving."""
+import json
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import qoi as qq
+from repro.data.fields import gaussian_field, velocity_field
+from repro.store import (CachingBackend, DatasetStore, DatasetWriter,
+                         InMemoryBackend, LocalFileBackend, RetrievalService)
+from repro.store import layout as lo
+
+
+@pytest.fixture(scope="module")
+def field():
+    return gaussian_field((36, 36, 36), slope=-2.2, seed=11)
+
+
+@pytest.fixture(scope="module")
+def store_dir(tmp_path_factory, field):
+    root = str(tmp_path_factory.mktemp("store"))
+    with DatasetWriter(root, chunk_elems=16000) as w:
+        w.write("v", field)
+    return root
+
+
+def test_manifest_layout(store_dir, field):
+    with open(os.path.join(store_dir, lo.MANIFEST_NAME)) as f:
+        j = json.load(f)
+    man = lo.Manifest.from_json(j)
+    v = man.variables["v"]
+    assert v.shape == field.shape
+    assert len(v.chunks) == -(-field.size // 16000)
+    seg_size = os.path.getsize(lo.segment_path(store_dir, v.segment_file))
+    # byte ranges tile the segment file exactly: no gaps, no overlaps
+    ranges = sorted((g.offset, g.size)
+                    for c in v.chunks for p in c.pieces
+                    for g in [p.sign] + p.groups)
+    pos = 0
+    for off, size in ranges:
+        assert off == pos
+        pos += size
+    assert pos == seg_size == v.stored_bytes
+
+
+def test_cold_incremental_tolerance_sequence(store_dir, field):
+    """Acceptance: cold open, 1e-2 -> 1e-3 -> 1e-4, delta fetches only,
+    bytes monotone and < full store at loose tolerances, bounds honored."""
+    store = DatasetStore.open(store_dir)
+    svc = RetrievalService(store)
+    s = svc.open_session()
+    total_prev = 0
+    for tol in [1e-2, 1e-3, 1e-4]:
+        xh, bound, fetched = s.retrieve("v", tol)
+        err = float(np.abs(xh - field).max())
+        assert err <= bound <= tol, (tol, err, bound)
+        assert s.bytes_fetched == total_prev + fetched
+        assert s.bytes_fetched > total_prev       # tighter tol -> more bytes
+        total_prev = s.bytes_fetched
+        assert s.bytes_fetched < store.stored_bytes
+    # re-request at an already-met tolerance: zero new bytes
+    _, _, fetched = s.retrieve("v", 1e-3)
+    assert fetched == 0
+    # stepping through tolerances costs the same total as going direct
+    s2 = svc.open_session()
+    s2.retrieve("v", 1e-4)
+    assert s2.bytes_fetched == s.bytes_fetched
+
+
+def test_backend_cache_accounting(store_dir):
+    backend = CachingBackend(LocalFileBackend(store_dir))
+    store = DatasetStore.open(store_dir, backend=backend)
+    svc = RetrievalService(store)
+    svc.open_session().retrieve("v", 1e-3)
+    cold = backend.stats.bytes_fetched
+    assert cold > 0 and backend.stats.cache_misses > 0
+    # a second session re-reads the same ranges: served from cache
+    svc.open_session().retrieve("v", 1e-3)
+    assert backend.stats.bytes_fetched == cold
+    assert backend.stats.cache_hits > 0
+    # dropping the cache forces re-fetch
+    backend.drop_cache()
+    svc.open_session().retrieve("v", 1e-3)
+    assert backend.stats.bytes_fetched > cold
+
+
+def test_in_memory_backend_roundtrip(store_dir, field):
+    with open(os.path.join(store_dir, lo.MANIFEST_NAME)) as f:
+        seg_key = lo.Manifest.from_json(json.load(f)).variables["v"].segment_file
+    buffers = {}
+    for name in [lo.MANIFEST_NAME, seg_key]:
+        with open(lo.segment_path(store_dir, name) if "/" in name
+                  else os.path.join(store_dir, name), "rb") as f:
+            buffers[name] = f.read()
+    store = DatasetStore.open(store_dir, backend=InMemoryBackend(buffers))
+    xh, bound, _ = RetrievalService(store).open_session().retrieve("v", 1e-3)
+    assert float(np.abs(xh - field).max()) <= bound <= 1e-3
+
+
+def test_planner_sees_true_range_sizes(store_dir):
+    store = DatasetStore.open(store_dir)
+    v = store.variable("v")
+    refd = lo.chunk_refactored(v, 0)
+    for pm, pe in zip(refd.pieces, v.chunks[0].pieces):
+        assert pm.sign_seg.is_stub and pm.sign_seg.stored_bytes == pe.sign.size
+        for g, gr in zip(pm.groups, pe.groups):
+            assert g.is_stub and g.stored_bytes == gr.size
+
+
+def test_retrieve_many_batches_across_sessions(store_dir, field):
+    store = DatasetStore.open(store_dir)
+    svc = RetrievalService(store)
+    s1, s2 = svc.open_session(), svc.open_session()
+    (x1, b1, f1), (x2, b2, f2) = svc.retrieve_many(
+        [(s1, "v", 1e-3), (s2, "v", 1e-4)])
+    assert float(np.abs(x1 - field).max()) <= b1 <= 1e-3
+    assert float(np.abs(x2 - field).max()) <= b2 <= 1e-4
+    # batched result identical to the single-session path
+    s3 = RetrievalService(DatasetStore.open(store_dir)).open_session()
+    x3, b3, f3 = s3.retrieve("v", 1e-3)
+    assert np.array_equal(x1, x3) and b1 == b3 and f1 == f3
+
+
+def test_retrieve_many_duplicate_requests_account_once(store_dir, field):
+    svc = RetrievalService(DatasetStore.open(store_dir))
+    s = svc.open_session()
+    (x1, b1, f1), (x2, b2, f2) = svc.retrieve_many(
+        [(s, "v", 1e-3), (s, "v", 1e-4)])
+    # duplicates share reader state: both get the tightest reconstruction,
+    # bytes are attributed exactly once
+    assert b1 <= 1e-4 and b2 <= 1e-4 and np.array_equal(x1, x2)
+    assert f1 > 0 and f2 == 0
+    assert s.bytes_fetched == f1 == s.reader("v").total_bytes_fetched
+
+
+def test_met_tolerance_rerequest_skips_decode(store_dir):
+    s = RetrievalService(DatasetStore.open(store_dir)).open_session()
+    x1, _, _ = s.retrieve("v", 1e-3)
+    x2, _, fetched = s.retrieve("v", 1e-3)
+    assert fetched == 0
+    assert x2 is x1  # served from the reconstruction cache, no re-decode
+
+
+def test_qoi_concurrent_sessions(tmp_path):
+    vs = list(velocity_field((20, 20, 20), seed=3))
+    truth = sum(v ** 2 for v in vs)
+    root = str(tmp_path / "qoi_store")
+    with DatasetWriter(root, chunk_elems=1 << 20) as w:
+        for n, v in zip(["vx", "vy", "vz"], vs):
+            w.write(n, v)
+    svc = RetrievalService(DatasetStore.open(root))
+
+    results = []
+    def client():
+        s = svc.open_session()
+        for tau in [1e-2, 1e-4]:
+            before = s.bytes_fetched
+            res = s.retrieve_qoi(["vx", "vy", "vz"], qq.V_TOTAL, tau)
+            actual = float(np.abs(sum(v ** 2 for v in res.values) - truth).max())
+            results.append((tau, res.converged, res.tau_estimated, actual,
+                            s.bytes_fetched - before))
+
+    threads = [threading.Thread(target=client) for _ in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(results) == 4
+    for tau, converged, tau_est, actual, delta in results:
+        assert converged and actual <= tau_est <= tau
+        assert delta > 0  # each tightening fetched only a (nonzero) delta
+
+
+def test_multi_variable_and_chunk_edges(tmp_path):
+    root = str(tmp_path / "edges")
+    arrs = {
+        "a": gaussian_field((2000,), seed=1),       # chunk | n with remainder
+        "b": gaussian_field((9, 9), seed=2),        # single small chunk
+        "scalar": np.float32(3.25).reshape(()),     # 0-d
+        "empty": np.zeros((0,), np.float32),        # no chunks at all
+    }
+    with DatasetWriter(root, chunk_elems=750) as w:
+        for k, v in arrs.items():
+            w.write(k, np.asarray(v))
+    store = DatasetStore.open(root)
+    assert sorted(store.variables) == sorted(arrs)
+    s = RetrievalService(store).open_session()
+    for k, v in arrs.items():
+        xh, bound, _ = s.retrieve(k, 1e-4)
+        assert xh.shape == np.asarray(v).shape
+        if np.asarray(v).size:
+            assert float(np.abs(xh - v).max()) <= bound <= 1e-4
+
+
+def test_rewrite_merges_committed_manifest(tmp_path):
+    """Writing into an existing store adds/replaces variables; untouched
+    committed variables survive."""
+    root = str(tmp_path / "merge")
+    xa = gaussian_field((20, 20), seed=1)
+    xb = gaussian_field((20, 20), seed=2)
+    with DatasetWriter(root, chunk_elems=1 << 20) as w:
+        w.write("a", xa)
+        w.write("b", xb)
+    with DatasetWriter(root, chunk_elems=1 << 20) as w:
+        w.write("a", (xa * 3).astype(np.float32))  # rewrite one variable
+    store = DatasetStore.open(root)
+    assert sorted(store.variables) == ["a", "b"]
+    s = RetrievalService(store).open_session()
+    xh_a, ba, _ = s.retrieve("a", 1e-4)
+    xh_b, bb, _ = s.retrieve("b", 1e-4)
+    assert float(np.abs(xh_a - xa * 3).max()) <= ba  # new generation
+    assert float(np.abs(xh_b - xb).max()) <= bb      # untouched survivor
+
+
+def test_interrupted_rewrite_keeps_old_store_consistent(tmp_path):
+    """A writer that dies before finalize() must not corrupt the committed
+    store: new generations land in fresh segment files, the old manifest
+    keeps addressing the old ones."""
+    root = str(tmp_path / "rw")
+    x = gaussian_field((30, 30), seed=5)
+    with DatasetWriter(root, chunk_elems=1 << 20) as w:
+        w.write("v", x)
+    w2 = DatasetWriter(root, chunk_elems=1 << 20)
+    w2.write("v", (x * 2).astype(np.float32))  # crash: finalize never runs
+    s = RetrievalService(DatasetStore.open(root)).open_session()
+    xh, bound, _ = s.retrieve("v", 1e-4)
+    assert float(np.abs(xh - x).max()) <= bound  # still the OLD data
+    # completing the rewrite commits the new generation
+    w2.finalize()
+    s2 = RetrievalService(DatasetStore.open(root)).open_session()
+    xh2, bound2, _ = s2.retrieve("v", 1e-4)
+    assert float(np.abs(xh2 - x * 2).max()) <= bound2
+
+
+def test_relative_tolerance_uses_global_range(store_dir, field):
+    store = DatasetStore.open(store_dir)
+    s = RetrievalService(store).open_session()
+    xh, bound, _ = s.retrieve("v", 1e-3, relative=True)
+    rng = float(field.max() - field.min())
+    assert float(np.abs(xh - field).max()) <= 1e-3 * rng

@@ -105,6 +105,18 @@ def test_qoi_estimators_conservative(kind):
     assert (actual <= est + 1e-7).all()
 
 
+def test_qoi_floor_terminates_with_empty_pieces():
+    """1-element arrays have empty detail pieces; an unreachable tau must
+    stop at the floor instead of spinning to max_iters (at_floor is defined
+    by peek_best, which skips unfetchable pieces)."""
+    r = rf.refactor_array(np.full((1,), 0.5, np.float32), "s")
+    readers = [rt.ProgressiveReader(r)]
+    res = qq.progressive_qoi_retrieve(readers, qq.QoI("sum_squares"), 1e-30,
+                                      method="ma", max_iters=100)
+    assert not res.converged
+    assert res.iterations < 20  # floor reached, loop exited early
+
+
 def test_ma_bitrate_not_worse_than_cp():
     """The paper's ordering: MA retrieval efficiency >= CP (Tables 2/3)."""
     vs = list(velocity_field((32, 32, 32), seed=9))
