@@ -1,8 +1,12 @@
-"""Shared benchmark utilities: timing, CSV rows."""
+"""Shared benchmark utilities: timing, CSV rows, JSON artifacts."""
 from __future__ import annotations
 
+import json
 import time
-from typing import Callable, List
+from pathlib import Path
+from typing import Callable, Dict, List
+
+REPO = Path(__file__).resolve().parents[1]
 
 
 def timeit(fn: Callable, warmup: int = 1, iters: int = 3) -> float:
@@ -20,3 +24,25 @@ def timeit(fn: Callable, warmup: int = 1, iters: int = 3) -> float:
 
 def row(name: str, seconds: float, derived: str) -> str:
     return f"{name},{seconds * 1e6:.1f},{derived}"
+
+
+def write_json(name: str, obj: Dict) -> Path:
+    """Write a result dict to out/benchmarks/<name>.json (CI artifact)."""
+    out = REPO / "out" / "benchmarks"
+    out.mkdir(parents=True, exist_ok=True)
+    path = out / f"{name}.json"
+    path.write_text(json.dumps(obj, indent=1))
+    return path
+
+
+def codec_batches(codec: Dict[str, int]) -> Dict[str, int]:
+    """Collapse a ``lossless_batch.BatchStats`` snapshot into the encode /
+    decode batch-launch counts the benchmark reports (single definition so
+    a counter rename cannot drift between benchmarks)."""
+    return {
+        "enc_batches": (codec["hist_batches"] + codec["huffman_pack_batches"]
+                        + codec["rle_scan_batches"]),
+        "dec_batches": (codec["huffman_unpack_batches"]
+                        + codec["rle_expand_batches"]),
+        "host_syncs": codec["host_syncs"],
+    }

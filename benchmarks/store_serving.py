@@ -14,20 +14,18 @@ dry-run machinery).
 """
 from __future__ import annotations
 
-import json
 import shutil
 import tempfile
 import time
-from pathlib import Path
 
 import numpy as np
 
-from benchmarks.common import row, timeit
+from benchmarks.common import codec_batches, row, timeit, write_json
+from repro.core import lossless_batch as lb
 from repro.data.fields import gaussian_field
 from repro.store import (CachingBackend, DatasetStore, DatasetWriter,
                          LocalFileBackend, RetrievalService)
 
-REPO = Path(__file__).resolve().parents[1]
 TOLS = [1e-1, 1e-2, 1e-3, 1e-4, 1e-5]
 N_SESSIONS = 4
 
@@ -44,20 +42,31 @@ def run(shape=(64, 64, 64), chunk_elems=40000) -> list:
     rng_ = float(x.max() - x.min())
     root = tempfile.mkdtemp(prefix="store_bench_")
     try:
+        lb.STATS.reset()
         t0 = time.perf_counter()
         with DatasetWriter(root, chunk_elems=chunk_elems) as w:
             entry = w.write("v", x)
         t_write = time.perf_counter() - t0
+        codec_w = lb.STATS.snapshot()
         result["write_s"] = t_write
         result["stored_bytes"] = entry.stored_bytes
         result["raw_bytes"] = int(x.nbytes)
+        result["codec_write"] = codec_w
         lines.append(row("store_write", t_write,
                          f"{x.nbytes / 1e9 / t_write:.4f}GBps"))
+        n_chunks = -(-x.size // chunk_elems)
+        cb_w = codec_batches(codec_w)
+        lines.append(row(
+            "store_write_codec", 0.0,
+            f"groups={codec_w['groups_encoded']}"
+            f";enc_batches={cb_w['enc_batches']}"
+            f";syncs_per_chunk={cb_w['host_syncs'] / max(n_chunks, 1):.1f}"))
 
         # ---- bytes-vs-tolerance curve (one incremental session, cold) -----
         store = _open(root)
         svc = RetrievalService(store)
         s = svc.open_session()
+        lb.STATS.reset()
         curve = []
         for tol in TOLS:
             xh, bound, fetched = s.retrieve("v", tol * rng_)
@@ -69,6 +78,13 @@ def run(shape=(64, 64, 64), chunk_elems=40000) -> list:
                              f"bytes={s.bytes_fetched};rel_err={err:.2e}"))
         result["curve"] = curve
         result["full_fraction"] = s.bytes_fetched / max(entry.stored_bytes, 1)
+        codec_r = lb.STATS.snapshot()
+        result["codec_read"] = codec_r
+        cb_r = codec_batches(codec_r)
+        lines.append(row(
+            "store_curve_codec", 0.0,
+            f"groups={codec_r['groups_decoded']}"
+            f";dec_batches={cb_r['dec_batches']};syncs={cb_r['host_syncs']}"))
         store.close()
 
         # ---- cold vs warm cache -------------------------------------------
@@ -121,9 +137,7 @@ def run(shape=(64, 64, 64), chunk_elems=40000) -> list:
         store.close()
         store2.close()
 
-        out = REPO / "out" / "benchmarks"
-        out.mkdir(parents=True, exist_ok=True)
-        (out / "store_serving.json").write_text(json.dumps(result, indent=1))
+        write_json("store_serving", result)
     finally:
         shutil.rmtree(root, ignore_errors=True)
     return lines

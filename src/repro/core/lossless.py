@@ -37,6 +37,20 @@ CHUNK = 4096          # symbols per parallel-decode chunk
 MAX_CODE_LEN = 16     # length-limited canonical Huffman
 RLE_BREAK = 32768     # forced run break so lengths fit in uint16
 
+# Bit offsets inside _huffman_pack/_huffman_unpack are uint32; a group whose
+# packed stream could reach 2**32 bits would silently wrap the cumsum, so
+# groups are capped at the largest symbol count that cannot overflow even if
+# every symbol takes the maximum code length (~2.7e8 symbols; a merged plane
+# group of a sanely-chunked array is orders of magnitude below this).
+MAX_GROUP_SYMS = ((1 << 32) - 1) // MAX_CODE_LEN
+
+
+def _check_group_size(n: int) -> None:
+    if n > MAX_GROUP_SYMS:
+        raise ValueError(
+            f"group of {n} symbols exceeds MAX_GROUP_SYMS={MAX_GROUP_SYMS} "
+            "(uint32 bit offsets would overflow); use smaller chunks")
+
 
 # ---------------------------------------------------------------- codebook --
 
@@ -251,26 +265,53 @@ class Segment:
 
     @staticmethod
     def from_bytes(buf: bytes) -> "Segment":
+        # corruption surfaces as ValueError unconditionally: a bare assert
+        # would be stripped under `python -O`, and a truncated buffer would
+        # otherwise escape as struct.error
+        try:
+            return Segment._from_bytes(buf)
+        except struct.error as exc:
+            raise ValueError(f"corrupt segment: truncated ({exc})") from exc
+
+    @staticmethod
+    def _from_bytes(buf: bytes) -> "Segment":
         off = 0
         magic, mcode, n_bytes, n_payload = struct.unpack_from("<IIIi", buf, off)
         off += 16
-        assert magic == _MAGIC, "corrupt segment"
+        if magic != _MAGIC:
+            raise ValueError("corrupt segment: bad magic")
+        if mcode not in _METHOD_NAMES:
+            raise ValueError(f"corrupt segment: unknown method code {mcode}")
         (n_meta,) = struct.unpack_from("<i", buf, off)
         off += 4
+        if n_meta < 0 or n_payload < 0:
+            raise ValueError("corrupt segment: negative count")
         meta = {}
         for _ in range(n_meta):
             (lk,) = struct.unpack_from("<i", buf, off); off += 4
+            if lk < 0:
+                raise ValueError("corrupt segment: negative key length")
             k = buf[off:off + lk].decode(); off += lk
             (v,) = struct.unpack_from("<q", buf, off); off += 8
             meta[k] = v
         payload = {}
         for _ in range(n_payload):
             (lk,) = struct.unpack_from("<i", buf, off); off += 4
+            if lk < 0:
+                raise ValueError("corrupt segment: negative key length")
             k = buf[off:off + lk].decode(); off += lk
             ch, size = struct.unpack_from("<ci", buf, off)
             off += struct.calcsize("<ci")
-            dt = np.dtype(ch.decode())
+            try:
+                dt = np.dtype(ch.decode())
+            except TypeError as exc:
+                raise ValueError(
+                    f"corrupt segment: bad dtype {ch!r}") from exc
+            if size < 0:
+                raise ValueError("corrupt segment: negative payload size")
             nb = dt.itemsize * size
+            if len(buf) - off < nb:
+                raise ValueError("corrupt segment: truncated payload")
             payload[k] = np.frombuffer(buf[off:off + nb], dtype=dt).copy()
             off += nb
         return Segment(_METHOD_NAMES[mcode], n_bytes, payload, meta)
@@ -282,6 +323,7 @@ def huffman_encode(data: np.ndarray, hist: Optional[np.ndarray] = None,
                    codebook: Optional[Tuple[np.ndarray, np.ndarray]] = None) -> Segment:
     data = np.asarray(data, dtype=np.uint8)
     n = data.size
+    _check_group_size(n)
     if hist is None:
         hist = np.bincount(data, minlength=256)
     if codebook is None:
@@ -309,6 +351,7 @@ def huffman_decode(seg: Segment) -> np.ndarray:
     codes = _codes_from_lengths(lengths)
     lut_sym, lut_len = _build_decode_lut(lengths, codes)
     n = seg.meta["n_syms"]
+    _check_group_size(n)
     if n == 0:
         return np.zeros(0, np.uint8)
     out = _huffman_unpack(jnp.asarray(seg.payload["words"]),
@@ -379,6 +422,7 @@ def compress_group(data: np.ndarray, cfg: HybridConfig = HybridConfig()) -> Segm
     """Algorithm 2, inner decision for one merged group (byte symbols)."""
     data = np.asarray(data, dtype=np.uint8)
     s = data.size
+    _check_group_size(s)
     if cfg.force == "huffman":
         return huffman_encode(data)
     if cfg.force == "rle":

@@ -1,0 +1,389 @@
+"""Batched, device-resident lossless engine (paper §5 on wide batches).
+
+The per-group codecs in ``repro.core.lossless`` are correct but launch one
+host-side histogram plus one tiny jit call per (piece, group) and pull every
+plane array to host before compressing — O(pieces x groups) host<->device
+round-trips per chunk.  This module is the batched formulation the paper's
+GPU encoder implies: the whole chunk's merged plane groups stay on device
+and flow through a handful of wide kernels.
+
+Write path (``encode_groups``), per call:
+
+  1. stack the chunk's group blobs into same-size buckets (the groups of a
+     piece share a size, so a chunk has ~#pieces buckets — stacking is
+     exact, no padding work),
+  2. one vmapped pass per bucket computes all 256-bin histograms AND all
+     RLE run-break counts (``_group_stats_batch``),
+  3. **sync #1** (small): every bucket's histograms + run counts come to
+     host in one ``device_get``, where Algorithm-2 selection and
+     canonical-codebook construction run (the codebook build is a 256-entry
+     heap per group — negligible),
+  4. the Huffman groups of each bucket are packed by one vmapped
+     ``_huffman_pack_batch`` invocation (literally ``vmap`` of the
+     reference ``_huffman_pack`` — bit-identity by construction), the RLE
+     groups by one ``_rle_scan_batch``,
+  5. **sync #2** (payloads): a single ``jax.device_get`` materializes every
+     payload of the chunk; host code only trims per-row tails.
+
+That is the one-big-sync-per-chunk contract: exactly two host syncs per
+``encode_groups`` call (plus one in ``repro.core.refactor.refactor_array``
+for the alignment scalars), and O(#pieces) kernel launches — independent of
+how many merged groups the chunk decomposes into.  Outputs are
+**bit-identical** to running ``lossless.compress_group`` per group
+(tests/test_lossless_batch.py checks serialized bytes).
+
+Read path (``decode_segments``): all same-shape Huffman (resp. RLE)
+segments of a request are decoded through one vmapped
+``_huffman_unpack``/``_rle_expand`` batch, with a single ``jax.device_get``
+for every decoded blob.
+
+All host materialization in this module goes through ``host_sync`` so tests
+and benchmarks can count syncs (``STATS``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lossless as ll
+
+
+# ------------------------------------------------------------------- stats --
+
+@dataclasses.dataclass
+class BatchStats:
+    """Counters for the batched engine (thread-safe, process-global).
+
+    ``host_syncs`` counts explicit device->host materializations
+    (``host_sync`` calls); the refactor write path performs O(1) of them per
+    chunk.  ``*_batches`` count kernel-batch invocations, i.e. how many
+    launches served how many groups."""
+    encode_calls: int = 0
+    decode_calls: int = 0
+    groups_encoded: int = 0
+    groups_decoded: int = 0
+    host_syncs: int = 0
+    hist_batches: int = 0
+    huffman_pack_batches: int = 0
+    rle_scan_batches: int = 0
+    huffman_unpack_batches: int = 0
+    rle_expand_batches: int = 0
+
+    def __post_init__(self):
+        self._lock = threading.Lock()
+
+    def add(self, **kw: int) -> None:
+        with self._lock:
+            for k, v in kw.items():
+                setattr(self, k, getattr(self, k) + v)
+
+    def snapshot(self) -> Dict[str, int]:
+        with self._lock:
+            return {f.name: getattr(self, f.name)
+                    for f in dataclasses.fields(self)}
+
+    def reset(self) -> None:
+        with self._lock:
+            for f in dataclasses.fields(self):
+                setattr(self, f.name, 0)
+
+
+STATS = BatchStats()
+
+
+def host_sync(tree):
+    """The engine's single door to host memory: one counted device_get."""
+    STATS.add(host_syncs=1)
+    return jax.device_get(tree)
+
+
+# ------------------------------------------------------------ device kernels --
+
+@jax.jit
+def _group_stats_batch(syms: jax.Array):
+    """(B, S) uint8 (a same-size bucket) -> (histograms (B,256) int32,
+    RLE run counts (B,) int32), all in one launch.
+
+    On CPU the histogram is sort + searchsorted (XLA CPU serializes
+    scatter-adds — ~4x slower than the sort formulation at chunk scale); on
+    accelerator backends it is the scatter-add formulation (hardware
+    atomics).
+
+    The run-break rule matches ``lossless._rle_scan`` exactly (neighbor
+    change or forced break every RLE_BREAK symbols), so the Algorithm-2 RLE
+    estimate agrees bit-for-bit with the per-group path."""
+    S = syms.shape[1]
+
+    if jax.default_backend() == "cpu":
+        edges = jnp.arange(256, dtype=jnp.uint8)
+
+        def hist_one(s):
+            bounds = jnp.searchsorted(jnp.sort(s), edges, side="right")
+            return jnp.diff(jnp.concatenate(
+                [jnp.zeros(1, bounds.dtype), bounds])).astype(jnp.int32)
+    else:
+        def hist_one(s):
+            return jnp.zeros((256,), jnp.int32).at[s.astype(jnp.int32)].add(1)
+
+    hists = jax.vmap(hist_one)(syms)
+    idx = jnp.arange(S, dtype=jnp.int32)
+    prev = jnp.concatenate([syms[:, :1] ^ jnp.uint8(255), syms[:, :-1]],
+                           axis=1)
+    brk = (syms != prev) | (idx[None, :] % ll.RLE_BREAK == 0)
+    nruns = jnp.sum(brk, axis=1, dtype=jnp.int32)
+    return hists, nruns
+
+
+# The batch pack/scan kernels ARE the reference per-group kernels, vmapped
+# over a same-size bucket — bit-identity with the per-group encoders holds
+# by construction, row for row.
+
+@jax.jit
+def _huffman_pack_batch(syms: jax.Array, lens_tab: jax.Array,
+                        codes_tab: jax.Array):
+    """(B, S) symbols + per-row codebooks -> vmapped ``_huffman_pack``:
+    (words (B, cap), total_bits (B,), chunk_offs (B, ceil(S/CHUNK)))."""
+    return jax.vmap(ll._huffman_pack)(syms, lens_tab, codes_tab)
+
+
+@jax.jit
+def _rle_scan_batch(syms: jax.Array):
+    """(B, S) symbols -> vmapped ``_rle_scan``: per-row (values, lengths,
+    nruns); run slots beyond a row's nruns are trimmed on host."""
+    return jax.vmap(ll._rle_scan)(syms)
+
+
+@functools.partial(jax.jit, static_argnames=("n_syms",))
+def _huffman_unpack_batch(words: jax.Array, chunk_offs: jax.Array,
+                          lut_sym: jax.Array, lut_len: jax.Array,
+                          n_syms: int):
+    return jax.vmap(lambda w, c, s, l: ll._huffman_unpack(w, c, s, l, n_syms))(
+        words, chunk_offs, lut_sym, lut_len)
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def _rle_expand_batch(values: jax.Array, lengths: jax.Array, n: int):
+    return jax.vmap(lambda v, l: ll._rle_expand(v, l, n))(values, lengths)
+
+
+# ---------------------------------------------------------------- utilities --
+
+def _pad_stack(blobs: Sequence[jax.Array], length: int) -> jax.Array:
+    rows = []
+    for b in blobs:
+        pad = length - b.shape[0]
+        rows.append(jnp.pad(b, (0, pad)) if pad else b)
+    return jnp.stack(rows)
+
+
+def batch_jobs(items, key) -> Dict[tuple, List[int]]:
+    """Group item indices by ``key(item)`` — the shared shape-batching
+    pattern of this engine and ``repro.store.service.reconstruct_many``."""
+    jobs: Dict[tuple, List[int]] = {}
+    for i, it in enumerate(items):
+        jobs.setdefault(key(it), []).append(i)
+    return jobs
+
+
+# ------------------------------------------------------------------- encode --
+
+def _select(size: int, hist: np.ndarray, n_runs: int, cfg: ll.HybridConfig
+            ) -> Tuple[str, Optional[Tuple[np.ndarray, np.ndarray]]]:
+    """Algorithm-2 inner decision, host side, from device-computed stats.
+
+    Mirrors ``lossless.compress_group`` decision-for-decision so the batched
+    engine picks identical methods (and identical Huffman codebooks)."""
+    if cfg.force == "huffman":
+        return "huffman", ll.build_codebook(hist)
+    if cfg.force == "rle":
+        return "rle", None
+    if cfg.force == "dc" or size <= cfg.size_threshold:
+        return "dc", None
+    r_h, lengths, codes = ll.estimate_huffman(hist, size)
+    if r_h > cfg.cr_threshold:
+        return "huffman", (lengths, codes)
+    if ll.estimate_rle(n_runs, size) > cfg.cr_threshold:
+        return "rle", None
+    return "dc", None
+
+
+def encode_groups(blobs: Sequence[jax.Array],
+                  cfg: ll.HybridConfig = ll.HybridConfig()
+                  ) -> List[ll.Segment]:
+    """Batched Algorithm 2 over a chunk's merged plane groups.
+
+    ``blobs`` are 1-D uint8 arrays (device-resident; host arrays are
+    uploaded).  Returns one ``lossless.Segment`` per blob, bit-identical to
+    ``[lossless.compress_group(b, cfg) for b in blobs]``, with exactly two
+    host syncs for the whole batch.
+
+    Groups are bucketed by size (the groups of one piece all share a size,
+    so a chunk has ~#pieces distinct sizes): every bucket stacks exactly —
+    no padding work — and runs through one vmapped stats/pack/scan
+    invocation per codec; ALL buckets' stats respectively payloads are
+    materialized by the same single ``host_sync``."""
+    if not blobs:
+        return []
+    sizes = [int(np.prod(b.shape, dtype=np.int64)) for b in blobs]
+    for s in sizes:
+        ll._check_group_size(s)  # before any upload/dispatch
+    STATS.add(encode_calls=1, groups_encoded=len(blobs))
+
+    segs: List[Optional[ll.Segment]] = [None] * len(blobs)
+    buckets: Dict[int, List[int]] = {}
+    for i, s in enumerate(sizes):
+        if s == 0:
+            # empty groups never touch the device; compress_group reproduces
+            # the per-group encoder (incl. force modes) exactly
+            segs[i] = ll.compress_group(np.zeros(0, np.uint8), cfg)
+        else:
+            buckets.setdefault(s, []).append(i)
+    if not buckets:
+        return segs
+
+    stacked = {
+        s: jnp.stack([jnp.asarray(blobs[i], dtype=jnp.uint8).reshape(-1)
+                      for i in idxs])
+        for s, idxs in buckets.items()}
+
+    # stage 1: all histograms + run counts, one launch per bucket, ONE sync
+    stats_dev = {}
+    for s, st in stacked.items():
+        STATS.add(hist_batches=1)
+        stats_dev[s] = _group_stats_batch(st)
+    stats_host = host_sync(stats_dev)
+
+    # stage 2: Algorithm-2 selection + codebooks (host, trivial)
+    methods: Dict[int, str] = {}
+    books: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+    for s, idxs in buckets.items():
+        hists, nruns = stats_host[s]
+        for j, i in enumerate(idxs):
+            m, book = _select(s, hists[j].astype(np.int64), int(nruns[j]),
+                              cfg)
+            methods[i] = m
+            if book is not None:
+                books[i] = book
+
+    # stage 3: dispatch one pack/scan per (bucket, codec), ONE payload sync
+    pend: List[Tuple[str, int, List[int], object]] = []
+    for s, idxs in buckets.items():
+        st = stacked[s]
+        pos = {i: j for j, i in enumerate(idxs)}
+        h = [i for i in idxs if methods[i] == "huffman"]
+        r = [i for i in idxs if methods[i] == "rle"]
+        d = [i for i in idxs if methods[i] == "dc"]
+        if h:
+            lens_tab = jax.device_put(
+                np.stack([books[i][0] for i in h]).astype(np.uint32))
+            codes_tab = jax.device_put(np.stack([books[i][1] for i in h]))
+            sel = jnp.asarray([pos[i] for i in h], jnp.int32)
+            STATS.add(huffman_pack_batches=1)
+            pend.append(("huffman", s, h,
+                         _huffman_pack_batch(st[sel], lens_tab, codes_tab)))
+        if r:
+            sel = jnp.asarray([pos[i] for i in r], jnp.int32)
+            STATS.add(rle_scan_batches=1)
+            pend.append(("rle", s, r, _rle_scan_batch(st[sel])))
+        if d:
+            sel = jnp.asarray([pos[i] for i in d], jnp.int32)
+            pend.append(("dc", s, d, st[sel]))
+    mats = host_sync([p[3] for p in pend])
+
+    for (kind, s, idxs, _), mat in zip(pend, mats):
+        if kind == "huffman":
+            words_b, bits_b, offs_b = mat
+            for j, i in enumerate(idxs):
+                total_bits = int(bits_b[j])
+                n_words = (total_bits + 31) // 32 + 1
+                segs[i] = ll.Segment(
+                    "huffman", s,
+                    payload={"words": words_b[j, :n_words].copy(),
+                             "chunk_offs": np.array(offs_b[j],
+                                                    dtype=np.uint32),
+                             "lengths": books[i][0]},
+                    meta={"n_syms": s, "total_bits": total_bits})
+        elif kind == "rle":
+            vals_b, lens_b, nruns_b = mat
+            for j, i in enumerate(idxs):
+                r = int(nruns_b[j])
+                segs[i] = ll.Segment(
+                    "rle", s,
+                    payload={"values": vals_b[j, :r].copy(),
+                             "lengths": lens_b[j, :r].astype(np.uint16)},
+                    meta={"n_syms": s})
+        else:
+            for j, i in enumerate(idxs):
+                segs[i] = ll.Segment("dc", s, {"raw": mat[j].copy()},
+                                     {"n_syms": s})
+    return segs
+
+
+# ------------------------------------------------------------------- decode --
+
+def decode_segments(segs: Sequence[ll.Segment]) -> List[np.ndarray]:
+    """Decode many segments, batching same-shape Huffman/RLE decodes.
+
+    Segments sharing (method, n_syms) are decoded through ONE vmapped
+    ``_huffman_unpack``/``_rle_expand`` call (Huffman ``words`` are padded to
+    the batch max — trailing zeros are exactly what the chunk decoder already
+    assumes).  Returns uint8 blobs aligned with ``segs``; bit-identical to
+    ``[lossless.decompress_group(s) for s in segs]``."""
+    if not segs:
+        return []
+    STATS.add(decode_calls=1, groups_decoded=len(segs))
+    outs: List[Optional[np.ndarray]] = [None] * len(segs)
+    pending = []  # (indices, device batch) resolved by one host_sync
+
+    def key(seg: ll.Segment):
+        return (seg.method, int(seg.meta.get("n_syms", seg.n_bytes)))
+
+    for (method, n), idxs in batch_jobs(segs, key).items():
+        ll._check_group_size(n)  # corrupt metadata must not drive allocation
+        if n == 0:
+            for i in idxs:
+                outs[i] = np.zeros(0, np.uint8)
+            continue
+        if method == "dc":
+            for i in idxs:
+                outs[i] = segs[i].payload["raw"]
+            continue
+        if method == "huffman":
+            luts = [ll._build_decode_lut(
+                segs[i].payload["lengths"],
+                ll._codes_from_lengths(segs[i].payload["lengths"]))
+                for i in idxs]
+            words = _pad_stack(
+                [jnp.asarray(segs[i].payload["words"]) for i in idxs],
+                max(segs[i].payload["words"].shape[0] for i in idxs))
+            chunk_offs = jnp.stack(
+                [jnp.asarray(segs[i].payload["chunk_offs"]) for i in idxs])
+            lut_sym = jnp.asarray(np.stack([l[0] for l in luts]))
+            lut_len = jnp.asarray(np.stack([l[1] for l in luts]))
+            STATS.add(huffman_unpack_batches=1)
+            pending.append((idxs, _huffman_unpack_batch(
+                words, chunk_offs, lut_sym, lut_len, n)))
+        elif method == "rle":
+            rmax = max(segs[i].payload["values"].shape[0] for i in idxs)
+            values = _pad_stack(
+                [jnp.asarray(segs[i].payload["values"]) for i in idxs], rmax)
+            lengths = _pad_stack(
+                [jnp.asarray(segs[i].payload["lengths"].astype(np.int32))
+                 for i in idxs], rmax)
+            STATS.add(rle_expand_batches=1)
+            pending.append((idxs, _rle_expand_batch(values, lengths, n)))
+        else:
+            raise ValueError(f"cannot decode method {method!r}")
+
+    if pending:
+        mats = host_sync([p[1] for p in pending])
+        for (idxs, _), mat in zip(pending, mats):
+            for j, i in enumerate(idxs):
+                outs[i] = np.asarray(mat[j], dtype=np.uint8)
+    return outs

@@ -56,6 +56,27 @@ def _chunk_slices(n: int, chunk: int) -> List[slice]:
     return [slice(i, min(i + chunk, n)) for i in range(0, n, chunk)]
 
 
+def _block_stage(out):
+    """Stage-boundary barrier: JAX dispatch is async, so a stage must not
+    stop its timer while its device work is still in flight — PipelineStats
+    would attribute the execution to whichever later stage synchronizes
+    first.  Blocks on any device arrays in the stage output, including
+    segment payloads nested in a ``Refactored`` (not a pytree, so it needs
+    the explicit walk).  Today's stages already end in explicit host
+    materialization (the batched codec engine's ``host_sync`` /
+    ``np.asarray``), so this is a guard for device-resident payloads rather
+    than a load-bearing sync; the serial-mode stage-sum test
+    (tests/test_pipeline_stats.py) pins the no-skew property."""
+    if isinstance(out, rf.Refactored):
+        jax.block_until_ready([a for p in out.pieces
+                               for seg in (p.sign_seg, *p.groups)
+                               for a in seg.payload.values()
+                               if isinstance(a, jax.Array)])
+    else:
+        jax.block_until_ready(out)
+    return out
+
+
 def overlap_map(n_items: int,
                 stage1: Callable[[int], object],
                 stage2: Callable[[int, object], object],
@@ -151,9 +172,10 @@ class ChunkedRefactorPipeline:
     def _compute(self, dev_chunk: jax.Array, name: str) -> rf.Refactored:
         t0 = time.perf_counter()
         kw = {} if self.mag_bits is None else {"mag_bits": self.mag_bits}
-        out = rf.refactor_array(dev_chunk, name=name, levels=self.levels,
-                                design=self.design, hybrid=self.hybrid,
-                                backend=self.backend, **kw)
+        out = _block_stage(
+            rf.refactor_array(dev_chunk, name=name, levels=self.levels,
+                              design=self.design, hybrid=self.hybrid,
+                              backend=self.backend, **kw))
         self.stats.compute_s += time.perf_counter() - t0
         return out
 
@@ -247,6 +269,11 @@ class ChunkedReconstructPipeline:
 
     def reconstruct(self, blobs: Sequence[bytes], tol: float) -> np.ndarray:
         t_start = time.perf_counter()
+        if not blobs:
+            # np.concatenate([]) raises ValueError; an empty chunk list is a
+            # valid zero-length dataset (e.g. refactoring an empty array)
+            self.stats.wall_s += time.perf_counter() - t_start
+            return np.zeros((0,), np.float32)
         outs: List[Optional[np.ndarray]] = [None] * len(blobs)
 
         def decompress(ci: int) -> rtv.ProgressiveReader:
@@ -259,7 +286,7 @@ class ChunkedReconstructPipeline:
         def recompose(ci: int, reader: rtv.ProgressiveReader) -> None:
             t0 = time.perf_counter()
             xh, _, fetched = reader.retrieve(tol)
-            outs[ci] = xh
+            outs[ci] = _block_stage(xh)
             self.stats.compute_s += time.perf_counter() - t0
             self.stats.bytes_in += fetched
 

@@ -23,7 +23,10 @@ import numpy as np
 from repro.core import align as al
 from repro.core import decompose as dc
 from repro.core import lossless as ll
+from repro.core import lossless_batch as lb
 from repro.kernels import ops as kops
+
+_WIRE_MAGIC = 0x4D445230  # 'MDR0' single-blob wire format
 
 
 @dataclasses.dataclass
@@ -74,6 +77,26 @@ class Refactored:
         return dc.error_bound(eps, ndim=len(self.shape), data_amax=self.data_amax)
 
 
+def _group_plane_split(mag_bits: int, group_size: int) -> List[int]:
+    group_planes: List[int] = []
+    left = mag_bits
+    while left > 0:
+        g = min(group_size, left)
+        group_planes.append(g)
+        left -= g
+    return group_planes
+
+
+def _device_bytes(planes: jax.Array) -> jax.Array:
+    """(P, W) uint32 planes -> flat uint8 blob, on device.
+
+    Matches ``np.asarray(planes).reshape(-1).view(np.uint8)`` byte-for-byte
+    (bitcast minor dimension is the little-endian byte order numpy's view
+    sees; tests/test_lossless_batch.py pins this)."""
+    flat = planes.reshape(-1)
+    return jax.lax.bitcast_convert_type(flat, jnp.uint8).reshape(-1)
+
+
 def refactor_array(
     x: np.ndarray | jax.Array,
     name: str = "var",
@@ -82,22 +105,85 @@ def refactor_array(
     mag_bits: int = al.DEFAULT_MAG_BITS,
     hybrid: ll.HybridConfig = ll.HybridConfig(),
     backend: str = "auto",
+    batched: bool = True,
 ) -> Refactored:
+    """Refactor one array.
+
+    With ``batched=True`` (default) magnitudes -> bitplanes -> merged-group
+    byte blobs stay on device end-to-end and all lossless work of the chunk
+    runs through ``lossless_batch.encode_groups`` — O(1) host syncs total
+    (one for the alignment scalars, two inside the engine) instead of one
+    round-trip per (piece, group).  ``batched=False`` is the original
+    per-group path; both produce byte-identical serializations.
+    """
     x = jnp.asarray(x, dtype=jnp.float32)
     if levels is None:
         levels = dc.num_levels(x.shape)
     pieces = dc.decompose(x, levels)
     ndim = x.ndim
+    group_planes = _group_plane_split(mag_bits, hybrid.group_size)
+
+    if not batched:
+        return _refactor_array_pergroup(x, pieces, name, levels, design,
+                                        mag_bits, hybrid, backend,
+                                        group_planes, ndim)
+
+    # -- device-resident batched path ---------------------------------------
+    # Stage every piece's planes + per-group blobs on device; collect the
+    # scalar outputs (amax/range/exponents) and pull them in ONE device_get.
+    scalars: List[jax.Array] = []
+    if x.size:
+        scalars.append(jnp.max(jnp.abs(x)))
+        scalars.append(jnp.max(x) - jnp.min(x))
+    blobs: List[jax.Array] = []          # canonical order: per piece sign,
+    n_words_all: List[int] = []          # then MSB-first groups
+    for piece in pieces:
+        mag, sign, e = al.align_encode(piece, mag_bits)
+        scalars.append(e)
+        planes = kops.encode_bitplanes(mag, mag_bits, design, backend=backend)
+        sign_planes = kops.encode_bitplanes(sign, 1, design, backend=backend)
+        n_words_all.append(int(planes.shape[1]))
+        blobs.append(_device_bytes(sign_planes))
+        row = 0
+        for g in group_planes:
+            blobs.append(_device_bytes(planes[row:row + g]))
+            row += g
+    host_scalars = list(lb.host_sync(scalars))
+    if x.size:
+        amax = float(host_scalars.pop(0))
+        rng = float(host_scalars.pop(0))
+    else:
+        amax = rng = 0.0
+    exponents = [int(e) for e in host_scalars]
+
+    segs = lb.encode_groups(blobs, hybrid)
+    metas: List[PieceMeta] = []
+    per_piece = 1 + len(group_planes)
+    for pi, piece in enumerate(pieces):
+        base = pi * per_piece
+        sign_seg = segs[base]
+        groups = segs[base + 1:base + per_piece]
+        for g, seg in zip(group_planes, groups):
+            seg.meta["n_planes"] = g
+            seg.meta["n_words"] = n_words_all[pi]
+        metas.append(PieceMeta(
+            n=int(piece.shape[0]), exponent=exponents[pi],
+            weight=1.0 if pi == 0 else float((1 << ndim) - 1),
+            sign_seg=sign_seg, groups=groups, group_planes=group_planes))
+    return Refactored(name=name, shape=tuple(x.shape), levels=levels,
+                      design=design, mag_bits=mag_bits,
+                      group_size=hybrid.group_size, data_amax=amax,
+                      data_range=rng, pieces=metas)
+
+
+def _refactor_array_pergroup(x, pieces, name, levels, design, mag_bits,
+                             hybrid, backend, group_planes, ndim) -> Refactored:
+    """Original per-(piece, group) path: one host round-trip per group.
+
+    Kept as the bit-exactness oracle for the batched engine (and for
+    debugging); produces byte-identical serializations."""
     amax = float(jnp.max(jnp.abs(x))) if x.size else 0.0
     rng = float(jnp.max(x) - jnp.min(x)) if x.size else 0.0
-
-    group_planes: List[int] = []
-    left = mag_bits
-    while left > 0:
-        g = min(hybrid.group_size, left)
-        group_planes.append(g)
-        left -= g
-
     metas: List[PieceMeta] = []
     for pi, piece in enumerate(pieces):
         mag, sign, e = al.align_encode(piece, mag_bits)
@@ -208,7 +294,7 @@ def refactored_to_bytes(r: Refactored) -> bytes:
         "design": r.design.encode(), "mag_bits": r.mag_bits,
         "group_size": r.group_size, "amax": r.data_amax, "range": r.data_range,
     }
-    parts = [struct.pack("<I", 0x4D445230)]
+    parts = [struct.pack("<I", _WIRE_MAGIC)]
     nb = head["name"]; db = head["design"]
     parts.append(struct.pack("<i", len(nb)) + nb)
     parts.append(struct.pack("<i", len(db)) + db)
@@ -228,6 +314,16 @@ def refactored_to_bytes(r: Refactored) -> bytes:
 
 
 def refactored_from_bytes(buf: bytes) -> Refactored:
+    try:
+        return _refactored_from_bytes(buf)
+    except struct.error as exc:  # truncation must surface as ValueError too
+        raise ValueError(f"corrupt refactored blob: truncated ({exc})") from exc
+
+
+def _refactored_from_bytes(buf: bytes) -> Refactored:
+    (magic,) = struct.unpack_from("<I", buf, 0)
+    if magic != _WIRE_MAGIC:
+        raise ValueError("corrupt refactored blob: bad magic")
     off = 4
     (ln,) = struct.unpack_from("<i", buf, off); off += 4
     name = buf[off:off + ln].decode(); off += ln

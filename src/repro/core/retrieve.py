@@ -19,6 +19,7 @@ import numpy as np
 from repro.core import align as al
 from repro.core import decompose as dc
 from repro.core import lossless as ll
+from repro.core import lossless_batch as lb
 from repro.core.refactor import Refactored
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
@@ -136,25 +137,35 @@ class ProgressiveReader:
     def _fetch_to(self, target_groups: List[int]) -> int:
         """Fetch segment deltas through the source; returns bytes fetched now.
 
+        All newly-fetched segments of the request are decoded through ONE
+        batched pass (``lossless_batch.decode_segments``): same-shape
+        Huffman/RLE groups — across pieces — share a single vmapped unpack
+        call instead of one tiny launch per segment.
+
         Byte accounting uses the sizes recorded on ``ref`` (true byte-range
         lengths for store-backed stubs), so it reflects exactly what moved
         over the backend."""
-        self.source.prefetch(self.pending_deltas(target_groups))
+        deltas = self.pending_deltas(target_groups)
+        self.source.prefetch(deltas)
+        wants: List[Tuple[int, int, ll.Segment]] = [
+            (i, g, self.source.sign(i) if g < 0 else self.source.group(i, g))
+            for i, g in deltas]
+        blobs = lb.decode_segments([w[2] for w in wants])
+
         fetched = 0
+        decoded: dict = {(i, g): (s, b) for (i, g, s), b in zip(wants, blobs)}
         for i, (pm, st) in enumerate(zip(self.ref.pieces, self.state)):
             tg = target_groups[i]
             if tg <= st.groups_fetched:
                 continue
             got = 0
             if st.groups_fetched == 0:
-                sign_blob = ll.decompress_group(self.source.sign(i))
                 w = pm.groups[0].meta["n_words"]
-                st.sign = sign_blob.view(np.uint32).reshape(1, w)
+                st.sign = decoded[(i, -1)][1].view(np.uint32).reshape(1, w)
                 got += pm.sign_seg.stored_bytes
             new_rows = []
             for g in range(st.groups_fetched, tg):
-                seg = self.source.group(i, g)
-                blob = ll.decompress_group(seg)
+                seg, blob = decoded[(i, g)]
                 w = seg.meta["n_words"]
                 if w:
                     rows = blob.view(np.uint32).reshape(-1, w)

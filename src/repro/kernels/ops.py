@@ -56,3 +56,18 @@ def decode_bitplanes(planes: jax.Array, num_planes_total: int, n: int,
     return _bp.decode_pallas(planes, num_planes_total, n, design,
                              tiles_per_block=tiles_per_block, unroll=unroll,
                              interpret=(b == "pallas_interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("num_planes_total", "n", "design",
+                                             "backend", "tiles_per_block",
+                                             "unroll"))
+def decode_bitplanes_batch(planes: jax.Array, num_planes_total: int, n: int,
+                           design: str = "register_block",
+                           backend: str = _DEFAULT_BACKEND,
+                           tiles_per_block: int = 8,
+                           unroll: str = "butterfly") -> jax.Array:
+    """(B, P, W) plane prefixes -> (B, n): one vmapped launch for B
+    same-shape decodes — used by ``store.service.reconstruct_many`` to share
+    kernel launches across chunks, variables, and sessions."""
+    return jax.vmap(lambda p: decode_bitplanes(
+        p, num_planes_total, n, design, backend, tiles_per_block, unroll))(planes)

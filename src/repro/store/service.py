@@ -33,6 +33,7 @@ import numpy as np
 
 from repro.core import align as al
 from repro.core import decompose as dc
+from repro.core import lossless_batch as lb
 from repro.core import pipeline as pl
 from repro.core import qoi as qq
 from repro.core.retrieve import ProgressiveReader, SegmentSource
@@ -88,37 +89,37 @@ def reconstruct_many(readers: Sequence[ProgressiveReader],
     mag_bits, design) — e.g. the same piece index of equal-sized chunks, or
     the same variable requested by different sessions — are stacked and
     decoded by ONE vmapped bitplane-decode/align-decode call instead of
-    len(batch) separate kernel launches.  Returns [(array, bound)] aligned
-    with ``readers``."""
-    jobs: Dict[tuple, List[Tuple[int, int]]] = {}
-    for ri, r in enumerate(readers):
-        for pi, (pm, st) in enumerate(zip(r.ref.pieces, r.state)):
-            p_kept = sum(pm.group_planes[:st.groups_fetched])
-            if p_kept == 0 or pm.n == 0:
-                continue
-            key = (int(st.planes.shape[0]), int(st.planes.shape[1]), pm.n,
-                   p_kept, r.ref.mag_bits, r.ref.design)
-            jobs.setdefault(key, []).append((ri, pi))
+    len(batch) separate kernel launches.  Shape grouping and the batched
+    kernels are shared with the codec engine (``lossless_batch.batch_jobs``
+    + ``kernels.ops.decode_bitplanes_batch``).  Returns [(array, bound)]
+    aligned with ``readers``."""
+    items_all: List[Tuple[int, int]] = [
+        (ri, pi) for ri, r in enumerate(readers)
+        for pi, (pm, st) in enumerate(zip(r.ref.pieces, r.state))
+        if pm.n != 0 and sum(pm.group_planes[:st.groups_fetched]) != 0]
+
+    def key(it: Tuple[int, int]):
+        ri, pi = it
+        r = readers[ri]
+        st, pm = r.state[pi], r.ref.pieces[pi]
+        return (int(st.planes.shape[0]), int(st.planes.shape[1]), pm.n,
+                sum(pm.group_planes[:st.groups_fetched]),
+                r.ref.mag_bits, r.ref.design)
 
     decoded: Dict[Tuple[int, int], jax.Array] = {}
-    for key, items in jobs.items():
-        _, _, n, p_kept, mag_bits, design = key
+    for k, pos in lb.batch_jobs(items_all, key).items():
+        _, _, n, p_kept, mag_bits, design = k
+        items = [items_all[p] for p in pos]
         planes = jnp.asarray(np.stack(
             [readers[ri].state[pi].planes for ri, pi in items]))
         signs = jnp.asarray(np.stack(
             [readers[ri].state[pi].sign for ri, pi in items]))
         es = jnp.asarray([readers[ri].ref.pieces[pi].exponent
                           for ri, pi in items], jnp.int32)
-        if len(items) == 1:
-            mags = kops.decode_bitplanes(planes[0], mag_bits, n, design,
-                                         backend=backend)[None]
-            sgs = kops.decode_bitplanes(signs[0], 1, n, design,
-                                        backend=backend)[None]
-        else:
-            mags = jax.vmap(lambda p: kops.decode_bitplanes(
-                p, mag_bits, n, design, backend=backend))(planes)
-            sgs = jax.vmap(lambda s: kops.decode_bitplanes(
-                s, 1, n, design, backend=backend))(signs)
+        mags = kops.decode_bitplanes_batch(planes, mag_bits, n, design,
+                                           backend=backend)
+        sgs = kops.decode_bitplanes_batch(signs, 1, n, design,
+                                          backend=backend)
         xs = jax.vmap(lambda m, s, e: al.align_decode(
             m, s, e, mag_bits, planes_kept=p_kept))(mags, sgs, es)
         for j, (ri, pi) in enumerate(items):

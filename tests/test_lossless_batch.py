@@ -1,0 +1,208 @@
+"""Batched device-resident lossless engine: bit-exact equivalence with the
+per-group codecs, O(1)-sync write path, oversize-group guards, corrupt-input
+validation, and store-backed round-trips."""
+import numpy as np
+import pytest
+
+from repro.core import lossless as ll
+from repro.core import lossless_batch as lb
+from repro.core import refactor as rf
+from repro.core import retrieve as rt
+from repro.data.fields import gaussian_field
+
+RNG = np.random.default_rng(42)
+
+GROUP_CASES = [
+    (RNG.geometric(0.25, 30000) % 256).astype(np.uint8),   # skewed -> huffman
+    np.zeros(40000, np.uint8),                             # degenerate runs
+    RNG.integers(0, 256, 30000).astype(np.uint8),          # incompressible -> dc
+    np.repeat(RNG.integers(0, 5, 60),
+              RNG.integers(1, 3000, 60)).astype(np.uint8),  # long runs
+    RNG.integers(0, 256, 3).astype(np.uint8),              # tiny -> dc
+    np.zeros(0, np.uint8),                                 # empty group
+    np.full(20000, 7, np.uint8),                           # single-symbol hist
+]
+
+
+# ---------------------------------------------------------------- equivalence
+
+def test_encode_groups_bit_identical_to_per_group():
+    segs_b = lb.encode_groups(GROUP_CASES)
+    for data, seg_b in zip(GROUP_CASES, segs_b):
+        seg_p = ll.compress_group(data)
+        assert seg_b.method == seg_p.method
+        assert seg_b.to_bytes() == seg_p.to_bytes()
+
+
+@pytest.mark.parametrize("force", ["huffman", "rle", "dc"])
+def test_encode_groups_bit_identical_forced(force):
+    cfg = ll.HybridConfig(force=force)
+    segs_b = lb.encode_groups(GROUP_CASES, cfg)
+    for data, seg_b in zip(GROUP_CASES, segs_b):
+        assert seg_b.to_bytes() == ll.compress_group(data, cfg).to_bytes()
+        assert np.array_equal(lb.decode_segments([seg_b])[0], data)
+
+
+def test_decode_segments_matches_per_group_decode():
+    # mixed batch incl. several same-shape huffman groups (one vmapped call)
+    same = [((RNG.geometric(0.2, 8192) + i) % 256).astype(np.uint8)
+            for i in range(4)]
+    segs = lb.encode_groups(GROUP_CASES + same,
+                            ll.HybridConfig(force="huffman"))
+    before = lb.STATS.snapshot()
+    blobs = lb.decode_segments(segs)
+    after = lb.STATS.snapshot()
+    for data, seg, blob in zip(GROUP_CASES + same, segs, blobs):
+        assert np.array_equal(blob, ll.decompress_group(seg))
+        assert np.array_equal(blob, data)
+    # the 4 same-shape groups decode through one batch, not 4 launches
+    assert (after["huffman_unpack_batches"] - before["huffman_unpack_batches"]
+            < sum(1 for s in segs if s.method == "huffman"))
+    # one payload sync for the whole mixed batch
+    assert after["host_syncs"] - before["host_syncs"] == 1
+
+
+def test_device_blob_matches_numpy_view():
+    # the write path's uint32 planes -> uint8 blob bitcast must reproduce
+    # numpy's little-endian view byte-for-byte
+    planes = RNG.integers(0, 2 ** 32, size=(6, 17), dtype=np.uint32)
+    import jax.numpy as jnp
+    dev = np.asarray(rf._device_bytes(jnp.asarray(planes)))
+    assert np.array_equal(dev, planes.reshape(-1).view(np.uint8))
+
+
+@pytest.mark.parametrize("shape,design,levels", [
+    ((36, 36), "register_block", 2),
+    ((33, 47), "locality", 3),
+    ((2000,), "register_block", 2),
+    ((), "register_block", 1),
+    ((3, 0), "register_block", 2),
+])
+def test_refactor_batched_serialization_identical(shape, design, levels):
+    n = int(np.prod(shape, dtype=int))
+    x = (gaussian_field(shape, seed=3) if n > 4 else
+         RNG.normal(size=shape).astype(np.float32) if n else
+         np.zeros(shape, np.float32))
+    rb = rf.refactor_array(x, "t", levels=levels, design=design, batched=True)
+    rp = rf.refactor_array(x, "t", levels=levels, design=design, batched=False)
+    assert rf.refactored_to_bytes(rb) == rf.refactored_to_bytes(rp)
+    if n:
+        xh, bound, _ = rt.ProgressiveReader(rb).retrieve(1e-4)
+        assert np.abs(xh - x).max() <= bound
+
+
+# --------------------------------------------------------------- sync budget
+
+def test_refactor_write_path_O1_host_syncs(monkeypatch):
+    """The batched write path performs a constant number of host syncs per
+    chunk (1 scalar + 2 engine) regardless of pieces x groups, and never
+    falls back to the per-group codecs."""
+    def forbid(*a, **kw):
+        raise AssertionError("per-group codec invoked on the batched path")
+
+    monkeypatch.setattr(ll, "compress_group", forbid)
+    monkeypatch.setattr(ll, "huffman_encode", forbid)
+    monkeypatch.setattr(ll, "rle_encode", forbid)
+    monkeypatch.setattr(ll, "dc_encode", forbid)
+
+    x = gaussian_field((48, 48), slope=-2.0, seed=5)
+    syncs = []
+    for levels, group_size in [(1, 8), (3, 2)]:  # 2x4 vs 4x13 groups
+        lb.STATS.reset()
+        r = rf.refactor_array(x, "t", levels=levels,
+                              hybrid=ll.HybridConfig(group_size=group_size))
+        snap = lb.STATS.snapshot()
+        syncs.append(snap["host_syncs"])
+        # kernel launches are O(size buckets) = O(pieces), not O(groups)
+        n_groups = sum(1 + len(p.groups) for p in r.pieces)
+        launches = (snap["hist_batches"] + snap["huffman_pack_batches"]
+                    + snap["rle_scan_batches"])
+        assert launches < n_groups
+        assert snap["hist_batches"] <= 3 * len(r.pieces)
+    # host syncs constant, independent of the (pieces x groups) decomposition
+    assert syncs[0] == syncs[1] == 3
+
+
+# ------------------------------------------------------------ oversize guard
+
+def test_huffman_uint32_bit_offset_guard():
+    """Groups that could overflow the uint32 bit cursor are rejected with a
+    clear error instead of silently wrapping the cumsum."""
+    big = np.zeros(ll.MAX_GROUP_SYMS + 1, np.uint8)  # virtual alloc, cheap
+    with pytest.raises(ValueError, match="MAX_GROUP_SYMS"):
+        ll.huffman_encode(big)
+    with pytest.raises(ValueError, match="MAX_GROUP_SYMS"):
+        ll.compress_group(big)
+    with pytest.raises(ValueError, match="MAX_GROUP_SYMS"):
+        lb.encode_groups([big])
+    # boundary: the cap itself is the largest size whose worst-case packed
+    # stream still fits in uint32 bit offsets
+    assert ll.MAX_GROUP_SYMS * ll.MAX_CODE_LEN < 1 << 32
+    assert (ll.MAX_GROUP_SYMS + 1) * ll.MAX_CODE_LEN >= 1 << 32
+    # decode side refuses corrupt oversize metadata too
+    seg = ll.Segment("huffman", 0,
+                     payload={"words": np.zeros(1, np.uint32),
+                              "chunk_offs": np.zeros(0, np.uint32),
+                              "lengths": np.zeros(256, np.uint8)},
+                     meta={"n_syms": ll.MAX_GROUP_SYMS + 1, "total_bits": 0})
+    with pytest.raises(ValueError, match="MAX_GROUP_SYMS"):
+        ll.huffman_decode(seg)
+    with pytest.raises(ValueError, match="MAX_GROUP_SYMS"):
+        lb.decode_segments([seg])  # the batched read path guards too
+
+
+# ------------------------------------------------------- corrupt serialization
+
+def test_segment_from_bytes_rejects_corruption():
+    seg = ll.compress_group(np.arange(100, dtype=np.uint8))
+    blob = bytearray(seg.to_bytes())
+    blob[0] ^= 0xFF  # clobber magic
+    with pytest.raises(ValueError, match="corrupt segment"):
+        ll.Segment.from_bytes(bytes(blob))
+    blob2 = bytearray(seg.to_bytes())
+    blob2[4] = 0x7F  # unknown method code
+    with pytest.raises(ValueError, match="corrupt segment"):
+        ll.Segment.from_bytes(bytes(blob2))
+    # truncation (the common real corruption) is a ValueError, not a raw
+    # struct.error leaking from the parser
+    for cut in [1, 8, len(seg.to_bytes()) // 2]:
+        with pytest.raises(ValueError, match="corrupt segment"):
+            ll.Segment.from_bytes(seg.to_bytes()[:cut])
+    # bad dtype chars and negative sizes are rejected, not mis-parsed
+    import struct
+    head = struct.pack("<IIIi", ll._MAGIC, 0, 4, 1) + struct.pack("<i", 0)
+    entry = struct.pack("<i", 1) + b"r"
+    with pytest.raises(ValueError, match="bad dtype"):
+        ll.Segment.from_bytes(head + entry + struct.pack("<ci", b"x", 4))
+    with pytest.raises(ValueError, match="negative payload size"):
+        ll.Segment.from_bytes(head + entry + struct.pack("<ci", b"B", -4))
+
+
+def test_refactored_from_bytes_rejects_bad_magic():
+    r = rf.refactor_array(np.ones((8, 8), np.float32), "t", levels=1)
+    blob = bytearray(rf.refactored_to_bytes(r))
+    blob[0] ^= 0xFF
+    with pytest.raises(ValueError, match="bad magic"):
+        rf.refactored_from_bytes(bytes(blob))
+    with pytest.raises(ValueError, match="corrupt refactored blob"):
+        rf.refactored_from_bytes(bytes(blob[:3]))
+
+
+# ------------------------------------------------------- store-backed round-trip
+
+def test_store_stub_roundtrip_uses_batched_decode(tmp_path):
+    from repro.store import DatasetStore, DatasetWriter, RetrievalService
+    x = gaussian_field((24, 24, 24), slope=-2.0, seed=9)
+    root = str(tmp_path / "store")
+    with DatasetWriter(root, chunk_elems=8000) as w:
+        w.write("v", x)
+    lb.STATS.reset()
+    svc = RetrievalService(DatasetStore.open(root))
+    s = svc.open_session()
+    xh, bound, fetched = s.retrieve("v", 1e-4)
+    assert float(np.abs(xh - x).max()) <= bound <= 1e-4
+    assert fetched > 0
+    snap = lb.STATS.snapshot()
+    # store-backed stub segments were decoded through the engine, batched
+    assert snap["groups_decoded"] > 0
+    assert snap["decode_calls"] < snap["groups_decoded"]

@@ -1,0 +1,45 @@
+"""Chunked-pipeline regressions: empty-input handling and async-dispatch-safe
+stage timing (PipelineStats must attribute execution, not dispatch)."""
+import numpy as np
+
+from repro.core.pipeline import (ChunkedReconstructPipeline,
+                                 ChunkedRefactorPipeline)
+from repro.data.fields import gaussian_field
+
+
+def test_reconstruct_empty_blob_list():
+    """Regression: np.concatenate([]) used to raise ValueError."""
+    p = ChunkedReconstructPipeline(pipelined=False)
+    out = p.reconstruct([], tol=1e-3)
+    assert out.shape == (0,) and out.dtype == np.float32
+    p2 = ChunkedReconstructPipeline(pipelined=True)
+    assert p2.reconstruct([], tol=1e-3).shape == (0,)
+
+
+def test_empty_array_through_both_pipelines():
+    blobs = ChunkedRefactorPipeline(pipelined=False).refactor(
+        np.zeros((0,), np.float32), "e")
+    out = ChunkedReconstructPipeline(pipelined=False).reconstruct(blobs, 1e-3)
+    assert out.shape == (0,)
+
+
+def test_serial_stage_times_sum_to_wall():
+    """In serial mode every stage blocks before its timer stops, so
+    copy_in + compute + copy_out must account for ~all of wall_s; async
+    dispatch leaking execution across stage boundaries would break this."""
+    x = gaussian_field((64, 64, 8), slope=-2.0, seed=2)
+    p = ChunkedRefactorPipeline(chunk_elems=1 << 14, pipelined=False,
+                                levels=2)
+    blobs = p.refactor(x, "v")
+    st = p.stats
+    ssum = st.copy_in_s + st.compute_s + st.copy_out_s
+    assert ssum <= st.wall_s * 1.01
+    assert ssum >= 0.6 * st.wall_s, (ssum, st.wall_s)
+
+    r = ChunkedReconstructPipeline(pipelined=False)
+    out = r.reconstruct(blobs, tol=1e-4)
+    assert np.abs(out - x.reshape(-1)).max() <= 1e-4
+    rs = r.stats
+    rsum = rs.copy_in_s + rs.compute_s + rs.copy_out_s
+    assert rsum <= rs.wall_s * 1.01
+    assert rsum >= 0.6 * rs.wall_s, (rsum, rs.wall_s)
