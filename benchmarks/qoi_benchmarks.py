@@ -4,6 +4,14 @@
   V_total tolerances, on NYX-proxy and mini-JHTDB-proxy velocity fields.
 * Fig 12/14: retrieval kernel throughput per method (and multi-device).
 * Fig 13: guarantee chain  actual <= estimated <= requested.
+* Incremental read path: per-Algorithm-3-iteration plane bytes actually
+  decoded by the device-resident engine (delta) vs. the from-scratch
+  full-decode baseline — iterations after the first should delta-decode
+  strictly fewer bytes than a full decode of their state.
+
+Emits the driver's CSV rows and writes the full result dict to
+``out/benchmarks/qoi_benchmarks.json`` (same out/-artifact convention as
+``pipeline_overlap`` / ``store_serving``).
 """
 from __future__ import annotations
 
@@ -11,8 +19,9 @@ import time
 
 import numpy as np
 
-from benchmarks.common import row
+from benchmarks.common import row, write_json
 from repro.core import qoi as qq
+from repro.core import reconstruct as rcn
 from repro.core import refactor as rf
 from repro.core import retrieve as rt
 from repro.data.fields import velocity_field
@@ -29,6 +38,7 @@ def _refs(shape, seed, slope):
 
 def run(shape=(40, 40, 40)) -> list:
     lines = []
+    result = {"shape": list(shape), "taus": TAUS, "runs": []}
     for ds_name, slope, seed in [("nyx", -1.8, 21), ("jhtdb", -5 / 3, 22)]:
         vs, refs = _refs(shape, seed, slope)
         truth = sum(v ** 2 for v in vs)
@@ -36,6 +46,7 @@ def run(shape=(40, 40, 40)) -> list:
             method = "mape" if mname.startswith("mape") else mname
             for tau in TAUS:
                 readers = [rt.ProgressiveReader(r) for r in refs]
+                rcn.STATS.reset()
                 t0 = time.perf_counter()
                 res = qq.progressive_qoi_retrieve(readers, qq.V_TOTAL, tau,
                                                   method=method, **kw)
@@ -43,12 +54,34 @@ def run(shape=(40, 40, 40)) -> list:
                 actual = float(np.abs(sum(v ** 2 for v in res.values)
                                       - truth).max())
                 ok = actual <= res.tau_estimated <= tau
+                # the incremental-engine value prop: every iteration after
+                # the first decodes only its delta plane bytes, against a
+                # baseline that re-decodes the whole fetched state
+                delta_after_first = sum(
+                    it["delta_plane_bytes"] for it in res.per_iteration[1:])
+                full_after_first = sum(
+                    it["full_plane_bytes"] for it in res.per_iteration[1:])
+                result["runs"].append({
+                    "dataset": ds_name, "method": mname, "tau": tau,
+                    "seconds": dt, "bitrate": res.bitrate,
+                    "iterations": res.iterations,
+                    "bytes_fetched": res.bytes_fetched,
+                    "guarantee_ok": ok, "actual": actual,
+                    "estimated": res.tau_estimated,
+                    "per_iteration": res.per_iteration,
+                    "delta_plane_bytes_after_first": delta_after_first,
+                    "full_plane_bytes_after_first": full_after_first,
+                    "engine": rcn.STATS.snapshot(),
+                })
                 lines.append(row(
                     f"qoi_{ds_name}_{mname}_{tau:.0e}", dt,
                     f"bitrate={res.bitrate:.2f};iters={res.iterations};"
                     f"tput={3 * vs[0].nbytes / 1e9 / dt:.4f}GBps;"
                     f"guarantee={'OK' if ok else 'VIOLATED'};"
-                    f"actual={actual:.2e};est={res.tau_estimated:.2e}"))
+                    f"actual={actual:.2e};est={res.tau_estimated:.2e};"
+                    f"delta_bytes={delta_after_first};"
+                    f"full_bytes={full_after_first}"))
+    write_json("qoi_benchmarks", result)
     return lines
 
 

@@ -18,6 +18,7 @@ adds the 2*eps-corrupted detail rows to the (eps+c)-corrupted coarse rows ->
 """
 from __future__ import annotations
 
+import functools
 from typing import List, Sequence, Tuple
 
 import jax
@@ -102,19 +103,6 @@ def _extract_detail(full: jax.Array, cs: Tuple[int, ...]) -> jax.Array:
     return full.reshape(-1)[jnp.asarray(idx)]
 
 
-def _insert_detail(corner: jax.Array, detail: jax.Array,
-                   full_shape: Tuple[int, ...]) -> jax.Array:
-    cs = corner.shape
-    mask = np.ones(full_shape, dtype=bool)
-    mask[tuple(slice(0, c) for c in cs)] = False
-    flat_idx = np.nonzero(mask.reshape(-1))[0]
-    corner_idx = np.nonzero(~mask.reshape(-1))[0]
-    out = jnp.zeros(int(np.prod(full_shape)), corner.dtype)
-    out = out.at[jnp.asarray(corner_idx)].set(corner.reshape(-1))
-    out = out.at[jnp.asarray(flat_idx)].set(detail)
-    return out.reshape(full_shape)
-
-
 def level_shapes(shape: Sequence[int], levels: int) -> List[Tuple[int, ...]]:
     """Shapes of the working array at each level, finest first."""
     shapes = [tuple(shape)]
@@ -123,19 +111,66 @@ def level_shapes(shape: Sequence[int], levels: int) -> List[Tuple[int, ...]]:
     return shapes
 
 
-def recompose(pieces: List[jax.Array], shape: Sequence[int], levels: int) -> jax.Array:
-    """Inverse of `decompose`."""
-    shapes = level_shapes(shape, levels)  # [finest ... coarsest]
-    cur = pieces[0].reshape(shapes[-1])
-    # pieces[1] = detail_L (coarsest) ... pieces[levels] = detail_1 (finest)
-    for k in range(levels, 0, -1):
-        full_shape = shapes[k - 1]
-        detail = pieces[levels - k + 1]
-        full = _insert_detail(cur, detail, full_shape)
+# --------------------------------------------------- cached recompose plans --
+#
+# One level of the inverse transform — scatter the coarse corner and the
+# level's detail coefficients into the full grid, then merge every axis —
+# only depends on the level's full shape.  The scatter indices (a nonzero
+# over the corner mask) and the jitted merge program are therefore cached
+# per shape: repeated recomposes (the progressive read path reconstructs
+# after every fetch) pay neither the index recomputation nor a retrace.
+#
+# ``recompose`` runs the plan end to end; the incremental engine
+# (``core.reconstruct``) runs a *suffix* of the same per-level functions
+# against cached intermediates, which keeps it bit-exact with the full pass
+# (identical compiled programs over identical inputs).
+
+
+# Each cached entry retains its scatter indices (O(n_full) ints, held on
+# device by the jit executable) until evicted, so the cap is deliberately
+# modest: a workload's live set is #levels x #distinct-chunk-shapes, far
+# below 64; anything beyond that re-derives the plan on a cache miss rather
+# than pinning device memory for shapes no longer in use.
+@functools.lru_cache(maxsize=64)
+def level_merge_fn(full_shape: Tuple[int, ...]):
+    """Jitted ``(coarse, detail) -> full`` merge for one level at
+    ``full_shape``, with precomputed scatter indices baked in."""
+    cs = _coarse_shape(full_shape)
+    mask = np.ones(full_shape, dtype=bool)
+    mask[tuple(slice(0, c) for c in cs)] = False
+    detail_idx = np.nonzero(mask.reshape(-1))[0]
+    corner_idx = np.nonzero(~mask.reshape(-1))[0]
+    n_full = int(np.prod(full_shape, dtype=np.int64))
+
+    @jax.jit
+    def merge(corner: jax.Array, detail: jax.Array) -> jax.Array:
+        out = jnp.zeros(n_full, corner.dtype)
+        out = out.at[corner_idx].set(corner.reshape(-1))
+        out = out.at[detail_idx].set(detail)
+        full = out.reshape(full_shape)
         for ax in range(len(full_shape) - 1, -1, -1):
             if full_shape[ax] > 1:
                 full = _merge_axis(full, ax, full_shape[ax])
-        cur = full
+        return full
+
+    return merge
+
+
+def recompose_plan(shape: Sequence[int], levels: int):
+    """[(full_shape, jitted merge fn)] for stages 1..levels (coarsest first):
+    stage ``i`` merges detail piece ``i`` (pieces order: [corner, detail_L,
+    ..., detail_1]) into the running coarse approximation."""
+    shapes = level_shapes(shape, levels)  # [finest ... coarsest]
+    return [(shapes[k - 1], level_merge_fn(shapes[k - 1]))
+            for k in range(levels, 0, -1)]
+
+
+def recompose(pieces: List[jax.Array], shape: Sequence[int], levels: int) -> jax.Array:
+    """Inverse of `decompose`."""
+    shapes = level_shapes(shape, levels)
+    cur = pieces[0].reshape(shapes[-1])
+    for i, (_, merge) in enumerate(recompose_plan(shape, levels)):
+        cur = merge(cur, pieces[i + 1])
     return cur
 
 

@@ -20,7 +20,7 @@ when p <= c).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -93,6 +93,19 @@ class QoIRetrievalResult:
     bitrate: float                   # bits per element, summed over variables
     eps_final: List[float]
     converged: bool
+    # per Algorithm-3 iteration: bytes fetched, delta plane bytes actually
+    # decoded (incremental engine), and the full-decode baseline (what a
+    # from-scratch decode of the iteration's state would run through the
+    # bitplane kernels) — benchmarks/qoi_benchmarks.py reports these.
+    per_iteration: List[Dict[str, int]] = dataclasses.field(
+        default_factory=list)
+
+
+# Cap for the CP estimator's halving loop: pathological tau values (e.g.
+# denormal-small relative to the achieved bounds) would otherwise spin
+# through hundreds of subnormal halvings before the estimate moves.  64
+# halvings take eps below 2^-64 of its start — past any float32 data scale.
+CP_MAX_HALVINGS = 64
 
 
 def _point_estimate(vh_at_p: np.ndarray, eps: np.ndarray, q: QoI) -> float:
@@ -122,7 +135,15 @@ def progressive_qoi_retrieve(
     c: float = 10.0,
     max_iters: int = 100,
 ) -> QoIRetrievalResult:
-    """Algorithm 3: iterate (fetch -> recompose -> estimate) until tau' <= tau."""
+    """Algorithm 3: iterate (fetch -> recompose -> estimate) until tau' <= tau.
+
+    The loop is device-resident end to end: reconstructions come back as
+    device arrays (``retrieve_device``/``reconstruct_device`` reuse each
+    reader's cached incremental state, so an iteration costs only its delta
+    decode + recompose suffix), the QoI error field and its max/argmax are
+    evaluated on device, and only the tau' scalar (plus, for CP, the values
+    at the argmax point) crosses to host per iteration — full arrays are
+    materialized exactly once, at return."""
     n_v = len(readers)
     ranges = np.array([r.ref.data_range for r in readers])
     amaxs = np.array([r.ref.data_amax for r in readers])
@@ -135,21 +156,34 @@ def progressive_qoi_retrieve(
 
     tau_p = np.inf
     bytes0 = sum(r.total_bytes_fetched for r in readers)
-    vals: List[np.ndarray] = [None] * n_v
+    vals: List[jax.Array] = [None] * n_v
     eps_ach = np.zeros(n_v)
     it = 0
     converged = False
-    while it < max_iters:
+    per_iter: List[Dict[str, int]] = []
+    bytes_prev = bytes0  # end-of-iteration fetches count toward the iteration
+    while it < max_iters:  # that decodes them (MA/MAPE fetch between rounds)
         it += 1
+        # per-reader engine counters, not the global STATS: concurrent
+        # sessions decoding elsewhere must not pollute this call's metrics
+        dec0 = sum(r.delta_decoded_bytes() for r in readers)
         # fetch + recompose each variable toward its current data error bound
         for i, r in enumerate(readers):
             if method == "ma" and it > 1:
                 r.fetch_one_more_group()
-                vals[i], eps_ach[i] = r.reconstruct()
+                vals[i], eps_ach[i] = r.reconstruct_device()
             else:
-                vals[i], eps_ach[i], _ = r.retrieve(float(eps_req[i]))
-        err = qoi_error_pointwise([jnp.asarray(v) for v in vals],
-                                  list(eps_ach), q)
+                vals[i], eps_ach[i], _ = r.retrieve_device(float(eps_req[i]))
+        bytes_now = sum(r.total_bytes_fetched for r in readers)
+        per_iter.append({
+            "iteration": it,
+            "bytes_fetched": bytes_now - bytes_prev,
+            "delta_plane_bytes": sum(r.delta_decoded_bytes()
+                                     for r in readers) - dec0,
+            "full_plane_bytes": sum(r.decoded_plane_bytes() for r in readers),
+        })
+        bytes_prev = bytes_now
+        err = qoi_error_pointwise(vals, list(eps_ach), q)
         tau_p_arr, pstar = _max_and_argmax(err)
         tau_p = float(tau_p_arr)
         if tau_p <= tau:
@@ -162,9 +196,17 @@ def progressive_qoi_retrieve(
             break
         # estimate next data error bounds
         if method == "cp":
-            vh_at_p = np.array([np.asarray(v).reshape(-1)[int(pstar)] for v in vals])
+            # index into the BROADCAST field: a variable smaller than err
+            # (mixed-size fleet) must be expanded first — jnp gathers clamp
+            # out-of-range indices silently instead of raising
+            p_idx = int(pstar)
+            vh_at_p = np.array([
+                float(jnp.ravel(jnp.broadcast_to(v, err.shape))[p_idx])
+                for v in vals])
             nxt = eps_ach.copy()
-            while _point_estimate(vh_at_p, nxt, q) > tau:
+            for _ in range(CP_MAX_HALVINGS):
+                if _point_estimate(vh_at_p, nxt, q) <= tau:
+                    break
                 nxt = nxt / 2.0
             eps_req = nxt
         elif method == "ma":
@@ -180,8 +222,10 @@ def progressive_qoi_retrieve(
             raise ValueError(method)
 
     total_bytes = sum(r.total_bytes_fetched for r in readers) - bytes0
-    n_vals = readers[0].ref.n_elements * n_v  # bitrate per stored value
+    # bitrate per stored value across the (possibly mixed-size) fleet
+    n_vals = sum(r.ref.n_elements for r in readers)
     return QoIRetrievalResult(
-        values=vals, tau_estimated=tau_p, tau_requested=tau, iterations=it,
-        bytes_fetched=total_bytes, bitrate=8.0 * total_bytes / max(n_vals, 1),
-        eps_final=list(eps_ach), converged=converged)
+        values=[np.asarray(v) for v in vals], tau_estimated=tau_p,
+        tau_requested=tau, iterations=it, bytes_fetched=total_bytes,
+        bitrate=8.0 * total_bytes / max(n_vals, 1),
+        eps_final=list(eps_ach), converged=converged, per_iteration=per_iter)

@@ -2,17 +2,24 @@
 
 ``ProgressiveReader`` keeps the fetched-segment state across requests, so
 successive retrievals are *incremental*: only the delta plane groups are
-fetched (and counted toward bytes_fetched), exactly as in MDR.
+fetched (and counted toward bytes_fetched), exactly as in MDR.  With
+``incremental=True`` (default) the decode side is incremental too: fetched
+groups stream into a device-resident ``core.reconstruct`` engine that
+delta-decodes them at their bit offsets and re-runs only the recompose
+suffix below the coarsest changed piece; ``incremental=False`` is the
+from-scratch full-decode path, kept as the bit-exactness oracle.
 
 Rate allocation is greedy by error-reduction-per-byte over (piece, group)
 candidates — the classic MDR allocation — against the conservative max-norm
-bound  eps_corner + ndim * sum(eps_level) + roundoff slack.
+bound  eps_corner + (2^ndim - 1) * sum(eps_level) + roundoff slack
+(``decompose.error_bound``).
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import List, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -20,6 +27,7 @@ from repro.core import align as al
 from repro.core import decompose as dc
 from repro.core import lossless as ll
 from repro.core import lossless_batch as lb
+from repro.core import reconstruct as rc
 from repro.core.refactor import Refactored
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
@@ -28,8 +36,8 @@ from repro.kernels import ref as kref
 @dataclasses.dataclass
 class _PieceState:
     groups_fetched: int = 0
-    planes: Optional[np.ndarray] = None     # (P, W) uint32, MSB-first prefix
-    sign: Optional[np.ndarray] = None       # decoded sign plane (1, W)
+    planes: Optional[np.ndarray] = None     # oracle mode: (P, W) host prefix
+    sign: Optional[np.ndarray] = None       # oracle mode: sign plane (1, W)
     bytes_fetched: int = 0
 
 
@@ -70,15 +78,26 @@ class ProgressiveReader:
     ``ref`` may hold real segments (then the default inline source serves
     them) or payload-free stubs (then ``source`` must resolve the payloads,
     e.g. via a store backend).  Planning only ever touches segment *sizes*,
-    so it works identically in both modes."""
+    so it works identically in both modes.
+
+    ``incremental=True`` (default) routes decoding through a device-resident
+    ``reconstruct.IncrementalReconstructor``: plane state never lands on
+    host, new fetches cost a delta decode + partial recompose, and
+    ``reconstruct_device`` serves repeats from the engine cache.
+    ``incremental=False`` keeps host plane prefixes and re-decodes
+    everything per call — the bit-exactness oracle."""
 
     def __init__(self, ref: Refactored, backend: str = "auto",
-                 source: Optional[SegmentSource] = None):
+                 source: Optional[SegmentSource] = None,
+                 incremental: bool = True):
         self.ref = ref
         self.backend = backend
         self.source = source if source is not None else InlineSegmentSource(ref)
         self.state = [_PieceState() for _ in ref.pieces]
         self.total_bytes_fetched = 0
+        self.incremental = incremental
+        self.engine = (rc.IncrementalReconstructor(ref, backend=backend)
+                       if incremental else None)
 
     # ----------------------------------------------------------- planning --
     def planes_kept(self) -> List[int]:
@@ -140,7 +159,10 @@ class ProgressiveReader:
         All newly-fetched segments of the request are decoded through ONE
         batched pass (``lossless_batch.decode_segments``): same-shape
         Huffman/RLE groups — across pieces — share a single vmapped unpack
-        call instead of one tiny launch per segment.
+        call instead of one tiny launch per segment.  In incremental mode
+        the resulting plane rows are staged on the reconstruction engine
+        (device upload only — bitplane decode is deferred and batched); the
+        oracle mode accumulates host plane prefixes instead.
 
         Byte accounting uses the sizes recorded on ``ref`` (true byte-range
         lengths for store-backed stubs), so it reflects exactly what moved
@@ -161,7 +183,11 @@ class ProgressiveReader:
             got = 0
             if st.groups_fetched == 0:
                 w = pm.groups[0].meta["n_words"]
-                st.sign = decoded[(i, -1)][1].view(np.uint32).reshape(1, w)
+                sign = decoded[(i, -1)][1].view(np.uint32).reshape(1, w)
+                if self.incremental:
+                    self.engine.stage_sign(i, sign)
+                else:
+                    st.sign = sign
                 got += pm.sign_seg.stored_bytes
             new_rows = []
             for g in range(st.groups_fetched, tg):
@@ -173,8 +199,13 @@ class ProgressiveReader:
                     rows = np.zeros((pm.group_planes[g], 0), np.uint32)
                 new_rows.append(rows)
                 got += pm.groups[g].stored_bytes
-            stack = [st.planes] if st.planes is not None else []
-            st.planes = np.concatenate(stack + new_rows, axis=0)
+            row_offset = sum(pm.group_planes[:st.groups_fetched])
+            if self.incremental:
+                self.engine.stage_rows(i, np.concatenate(new_rows, axis=0),
+                                       row_offset)
+            else:
+                stack = [st.planes] if st.planes is not None else []
+                st.planes = np.concatenate(stack + new_rows, axis=0)
             st.groups_fetched = tg
             st.bytes_fetched += got
             fetched += got
@@ -212,8 +243,9 @@ class ProgressiveReader:
         return self._fetch_to(target)
 
     # -------------------------------------------------------- reconstruction --
-    def reconstruct(self) -> Tuple[np.ndarray, float]:
-        """Decode current state -> (array, guaranteed max-norm error bound)."""
+    def _reconstruct_full_device(self) -> jax.Array:
+        """Oracle path: re-decode every fetched piece from its host plane
+        prefix and recompose from scratch (no state reuse)."""
         r = self.ref
         pieces_dec = []
         for pm, st in zip(r.pieces, self.state):
@@ -228,16 +260,57 @@ class ProgressiveReader:
             x = al.align_decode(mag, sign, jnp.int32(pm.exponent),
                                 r.mag_bits, planes_kept=p_kept)
             pieces_dec.append(x)
-        out = dc.recompose(pieces_dec, r.shape, r.levels)
-        return np.asarray(out), self.current_bound()
+        return dc.recompose(pieces_dec, r.shape, r.levels)
+
+    def reconstruct_device(self) -> Tuple[jax.Array, float]:
+        """Decode current state -> (device array, max-norm error bound).
+
+        Incremental mode costs only the staged delta decode + recompose
+        suffix (engine-cached when nothing changed); the result stays on
+        device — no host sync on this path."""
+        if self.incremental:
+            out = self.engine.reconstruct_device()
+        else:
+            out = self._reconstruct_full_device()
+        return out, self.current_bound()
+
+    def reconstruct(self) -> Tuple[np.ndarray, float]:
+        """Decode current state -> (host array, guaranteed max-norm bound)."""
+        x, bound = self.reconstruct_device()
+        return np.asarray(x), bound
+
+    def delta_decoded_bytes(self) -> int:
+        """Delta plane bytes this reader's engine has actually decoded
+        (0 in oracle mode — there is no delta path to account)."""
+        return self.engine.bytes_decoded if self.incremental else 0
+
+    def decoded_plane_bytes(self) -> int:
+        """Plane + sign bytes a from-scratch decode of the current state runs
+        through the bitplane decoder — the full-decode baseline that the
+        engine's delta accounting (``delta_decoded_bytes``) is measured
+        against."""
+        total = 0
+        for pm, st in zip(self.ref.pieces, self.state):
+            if pm.n == 0 or st.groups_fetched == 0:
+                continue
+            w = kref.padded_words(pm.n, self.ref.design)
+            kept = sum(pm.group_planes[:st.groups_fetched])
+            total += 4 * w * (kept + 1)  # +1: the sign plane
+        return total
+
+    def retrieve_device(self, tol: float, relative: bool = False
+                        ) -> Tuple[jax.Array, float, int]:
+        """``retrieve`` with the reconstruction left on device."""
+        if relative:
+            tol = tol * self.ref.data_range
+        target = self.plan(tol)
+        fetched = self._fetch_to(target)
+        x, bound = self.reconstruct_device()
+        return x, bound, fetched
 
     def retrieve(self, tol: float, relative: bool = False) -> Tuple[np.ndarray, float, int]:
         """Progressively retrieve to |x - x_hat|_inf <= tol.
 
         Returns (x_hat, achieved_bound, bytes_fetched_this_call)."""
-        if relative:
-            tol = tol * self.ref.data_range
-        target = self.plan(tol)
-        fetched = self._fetch_to(target)
-        x, bound = self.reconstruct()
-        return x, bound, fetched
+        x, bound, fetched = self.retrieve_device(tol, relative=relative)
+        return np.asarray(x), bound, fetched

@@ -71,3 +71,39 @@ def decode_bitplanes_batch(planes: jax.Array, num_planes_total: int, n: int,
     kernel launches across chunks, variables, and sessions."""
     return jax.vmap(lambda p: decode_bitplanes(
         p, num_planes_total, n, design, backend, tiles_per_block, unroll))(planes)
+
+
+def decode_bitplanes_offset(planes: jax.Array, num_planes_total: int, n: int,
+                            plane_offset: int,
+                            design: str = "register_block",
+                            backend: str = _DEFAULT_BACKEND,
+                            tiles_per_block: int = 8,
+                            unroll: str = "butterfly") -> jax.Array:
+    """Decode a plane-group slice that sits at ``plane_offset`` rows into the
+    MSB-first stack: row ``j`` of ``planes`` carries magnitude bit
+    ``num_planes_total - 1 - (plane_offset + j)``.
+
+    The returned (n,) uint32 magnitudes hold ONLY those bits — OR-ing the
+    results of disjoint slices reproduces the full-stack decode exactly
+    (integer bits are disjoint), which is what makes the incremental read
+    path (``core.reconstruct``) bit-exact with the full-decode oracle.
+
+    Implemented as a truncated-total decode: shifting the total by the offset
+    shifts every row's bit position identically, so the existing kernels (and
+    their jit caches, Pallas included) are reused as-is."""
+    return decode_bitplanes(planes, num_planes_total - plane_offset, n,
+                            design, backend, tiles_per_block, unroll)
+
+
+def decode_bitplanes_offset_batch(planes: jax.Array, num_planes_total: int,
+                                  n: int, plane_offset: int,
+                                  design: str = "register_block",
+                                  backend: str = _DEFAULT_BACKEND,
+                                  tiles_per_block: int = 8,
+                                  unroll: str = "butterfly") -> jax.Array:
+    """(B, P, W) same-offset plane-group slices -> (B, n) partial magnitudes:
+    the batched form of ``decode_bitplanes_offset`` (one vmapped launch).
+    Used by the incremental reconstruction engine to decode newly fetched
+    groups across pieces, chunks, variables, and sessions in one call."""
+    return decode_bitplanes_batch(planes, num_planes_total - plane_offset, n,
+                                  design, backend, tiles_per_block, unroll)

@@ -11,14 +11,17 @@ Serving a request runs in two stages mapped onto the core pipeline's overlap
 primitive (``core.pipeline.overlap_map``): the feeder thread *warms* the
 backend cache with exactly the delta byte ranges the greedy plan needs
 (I/O), while the caller thread runs lossless decompress + bitplane decode
-(compute).  Bitplane decodes of same-shaped (piece, prefix) states — across
-chunks, variables and sessions — are batched through one vmapped kernel
-call (``reconstruct_many``), which is where multi-session serving wins over
-running each reader alone.
+(compute).  Every chunk reader owns a device-resident incremental
+reconstruction engine (``core.reconstruct``), so serving decodes only the
+*delta* plane groups a request fetched: ``reconstruct_many`` drains the
+staged groups of every engine in the batch and decodes each same-shaped
+(rows, words, n, offset) bucket — across chunks, variables, and sessions —
+through one vmapped kernel call, which is where multi-session serving wins
+over running each reader alone.
 
 Both max-norm (``Session.retrieve``) and QoI (``Session.retrieve_qoi``)
 requests are incremental: repeating a request with a tighter tolerance
-fetches only the additional plane groups.
+fetches (and decodes) only the additional plane groups.
 """
 from __future__ import annotations
 
@@ -31,13 +34,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import align as al
-from repro.core import decompose as dc
-from repro.core import lossless_batch as lb
 from repro.core import pipeline as pl
 from repro.core import qoi as qq
+from repro.core import reconstruct as rc
 from repro.core.retrieve import ProgressiveReader, SegmentSource
-from repro.kernels import ops as kops
 from repro.store import layout as lo
 
 
@@ -82,59 +82,21 @@ class StoreSegmentSource(SegmentSource):
 # ------------------------------------------------------------ batched decode --
 
 def reconstruct_many(readers: Sequence[ProgressiveReader],
-                     backend: str = "auto") -> List[Tuple[np.ndarray, float]]:
-    """Decode + recompose many readers, batching same-shaped piece decodes.
+                     backend: str = "auto") -> List[Tuple[jax.Array, float]]:
+    """Decode + recompose many readers, batching same-shaped *delta* decodes.
 
-    Pieces whose fetched state agrees in (rows, words, n, planes_kept,
-    mag_bits, design) — e.g. the same piece index of equal-sized chunks, or
-    the same variable requested by different sessions — are stacked and
-    decoded by ONE vmapped bitplane-decode/align-decode call instead of
-    len(batch) separate kernel launches.  Shape grouping and the batched
-    kernels are shared with the codec engine (``lossless_batch.batch_jobs``
-    + ``kernels.ops.decode_bitplanes_batch``).  Returns [(array, bound)]
-    aligned with ``readers``."""
-    items_all: List[Tuple[int, int]] = [
-        (ri, pi) for ri, r in enumerate(readers)
-        for pi, (pm, st) in enumerate(zip(r.ref.pieces, r.state))
-        if pm.n != 0 and sum(pm.group_planes[:st.groups_fetched]) != 0]
-
-    def key(it: Tuple[int, int]):
-        ri, pi = it
-        r = readers[ri]
-        st, pm = r.state[pi], r.ref.pieces[pi]
-        return (int(st.planes.shape[0]), int(st.planes.shape[1]), pm.n,
-                sum(pm.group_planes[:st.groups_fetched]),
-                r.ref.mag_bits, r.ref.design)
-
-    decoded: Dict[Tuple[int, int], jax.Array] = {}
-    for k, pos in lb.batch_jobs(items_all, key).items():
-        _, _, n, p_kept, mag_bits, design = k
-        items = [items_all[p] for p in pos]
-        planes = jnp.asarray(np.stack(
-            [readers[ri].state[pi].planes for ri, pi in items]))
-        signs = jnp.asarray(np.stack(
-            [readers[ri].state[pi].sign for ri, pi in items]))
-        es = jnp.asarray([readers[ri].ref.pieces[pi].exponent
-                          for ri, pi in items], jnp.int32)
-        mags = kops.decode_bitplanes_batch(planes, mag_bits, n, design,
-                                           backend=backend)
-        sgs = kops.decode_bitplanes_batch(signs, 1, n, design,
-                                          backend=backend)
-        xs = jax.vmap(lambda m, s, e: al.align_decode(
-            m, s, e, mag_bits, planes_kept=p_kept))(mags, sgs, es)
-        for j, (ri, pi) in enumerate(items):
-            decoded[(ri, pi)] = xs[j]
-
-    outs: List[Tuple[np.ndarray, float]] = []
-    for ri, r in enumerate(readers):
-        pieces_dec = []
-        for pi, pm in enumerate(r.ref.pieces):
-            arr = decoded.get((ri, pi))
-            pieces_dec.append(arr if arr is not None
-                              else jnp.zeros((pm.n,), jnp.float32))
-        out = dc.recompose(pieces_dec, r.ref.shape, r.ref.levels)
-        outs.append((np.asarray(out), r.current_bound()))
-    return outs
+    Each incremental reader's engine holds the newly fetched, still-undecoded
+    plane groups; ``reconstruct.batch_apply_pending`` decodes every
+    same-shaped (rows, words, n, offset) bucket — across pieces, chunks,
+    variables, and sessions — through ONE vmapped
+    ``kernels.ops.decode_bitplanes_offset_batch`` call (grouping shared with
+    the codec engine via ``lossless_batch.batch_jobs``).  Unlike the old
+    cross-session *full* decode, already-decoded state is never re-run:
+    clean engines serve their cached reconstruction.  Returns
+    [(device array, bound)] aligned with ``readers``; oracle
+    (``incremental=False``) readers fall back to their own full decode."""
+    rc.batch_apply_pending([r.engine for r in readers if r.incremental])
+    return [r.reconstruct_device() for r in readers]
 
 
 # ------------------------------------------------------------ variable reader --
@@ -157,21 +119,30 @@ class StoreVariableReader:
     the variable-level bound is the max over chunk bounds and a tolerance
     request maps to the same tolerance per chunk."""
 
+    # ``incremental=False`` wires the chunk readers to the from-scratch
+    # full-decode oracle: EVERY reconstruction re-decodes every chunk with
+    # no cross-chunk batching or caching.  It exists for bit-exactness
+    # debugging against the engine, not for serving.
     def __init__(self, store: lo.DatasetStore, name: str,
-                 backend: str = "auto"):
+                 backend: str = "auto", incremental: bool = True):
         var = store.variable(name)
         self.var = var
         self.name = name
         self.backend = backend
+        self.incremental = incremental
         self.chunk_readers = [
             ProgressiveReader(lo.chunk_refactored(var, ci), backend=backend,
-                              source=StoreSegmentSource(store, name, ci))
+                              source=StoreSegmentSource(store, name, ci),
+                              incremental=incremental)
             for ci in range(len(var.chunks))]
         self.ref = _VarRef(var, self.chunk_readers)
-        # per-chunk decode cache [(sig, x, bound) | None] + assembled cache
-        self._chunk_recon: List[Optional[Tuple[tuple, np.ndarray, float]]] = \
-            [None] * len(self.chunk_readers)
-        self._recon: Optional[Tuple[tuple, np.ndarray, float]] = None
+        # assembled-variable cache, keyed on the fetch signature; per-chunk
+        # reconstructions are cached inside each chunk reader's engine.  The
+        # host copy is memoized separately so repeat requests at a met
+        # tolerance return the identical ndarray object (no re-decode, no
+        # re-transfer).
+        self._recon: Optional[Tuple[tuple, jax.Array, float]] = None
+        self._recon_np: Optional[Tuple[tuple, np.ndarray]] = None
 
     # -- QoI-loop surface ----------------------------------------------------
     @property
@@ -206,53 +177,56 @@ class StoreVariableReader:
         target[piece] += 1
         return r._fetch_to(target)
 
+    def decoded_plane_bytes(self) -> int:
+        return sum(r.decoded_plane_bytes() for r in self.chunk_readers)
+
+    def delta_decoded_bytes(self) -> int:
+        return sum(r.delta_decoded_bytes() for r in self.chunk_readers)
+
     # -- retrieval -----------------------------------------------------------
-    def _assemble(self, outs: List[Tuple[np.ndarray, float]]
-                  ) -> Tuple[np.ndarray, float]:
+    def _assemble(self, outs: List[Tuple[jax.Array, float]]
+                  ) -> Tuple[jax.Array, float]:
         if not outs:
-            return np.zeros(self.var.shape, np.float32), 0.0
-        flat = np.concatenate([o[0].reshape(-1) for o in outs])
+            return jnp.zeros(self.var.shape, jnp.float32), 0.0
+        flat = jnp.concatenate([o[0].reshape(-1) for o in outs])
         return flat.reshape(self.var.shape), max(o[1] for o in outs)
 
-    # Reconstructions are cached at two levels, keyed on fetch signatures:
-    # per chunk (an incremental fetch touching one chunk re-decodes only that
-    # chunk) and assembled (a request at an already-met tolerance is O(1)).
+    # The assembled variable is cached on the fetch signature; chunk-level
+    # reuse lives in each chunk reader's engine (clean engines return their
+    # cached device array, partially-stale ones recompose only a suffix).
     # Returned arrays are shared — treat as read-only.
     def _signature(self) -> tuple:
         return tuple(s.groups_fetched
                      for r in self.chunk_readers for s in r.state)
 
-    def _chunk_sig(self, ci: int) -> tuple:
-        return tuple(s.groups_fetched for s in self.chunk_readers[ci].state)
-
-    def stale_chunks(self) -> List[int]:
-        return [ci for ci in range(len(self.chunk_readers))
-                if self._chunk_recon[ci] is None
-                or self._chunk_recon[ci][0] != self._chunk_sig(ci)]
-
-    def _store_chunk(self, ci: int, out: Tuple[np.ndarray, float]) -> None:
-        self._chunk_recon[ci] = (self._chunk_sig(ci), out[0], out[1])
-
-    def reconstruct(self) -> Tuple[np.ndarray, float]:
+    def reconstruct_device(self) -> Tuple[jax.Array, float]:
         sig = self._signature()
         if self._recon is not None and self._recon[0] == sig:
             return self._recon[1], self._recon[2]
-        stale = self.stale_chunks()
-        if stale:
-            outs = reconstruct_many([self.chunk_readers[ci] for ci in stale],
-                                    self.backend)
-            for ci, out in zip(stale, outs):
-                self._store_chunk(ci, out)
-        x, bound = self._assemble([(c[1], c[2]) for c in self._chunk_recon])
+        outs = reconstruct_many(self.chunk_readers, self.backend)
+        x, bound = self._assemble(outs)
         self._recon = (sig, x, bound)
         return x, bound
 
-    def retrieve(self, tol: float, relative: bool = False
-                 ) -> Tuple[np.ndarray, float, int]:
+    def reconstruct(self) -> Tuple[np.ndarray, float]:
+        x_dev, bound = self.reconstruct_device()
+        sig = self._recon[0]
+        if self._recon_np is None or self._recon_np[0] != sig:
+            self._recon_np = (sig, np.asarray(x_dev))
+        return self._recon_np[1], bound
+
+    def retrieve_device(self, tol: float, relative: bool = False
+                        ) -> Tuple[jax.Array, float, int]:
         if relative:
             tol = tol * self.var.range
         fetched = _warm_and_fetch([(r, r.plan(tol)) for r in self.chunk_readers])
-        x, bound = self.reconstruct()
+        x, bound = self.reconstruct_device()
+        return x, bound, fetched
+
+    def retrieve(self, tol: float, relative: bool = False
+                 ) -> Tuple[np.ndarray, float, int]:
+        _, bound, fetched = self.retrieve_device(tol, relative=relative)
+        x, _ = self.reconstruct()  # memoized host copy of the same state
         return x, bound, fetched
 
 
@@ -296,7 +270,8 @@ class Session:
         r = self._readers.get(var)
         if r is None:
             r = StoreVariableReader(self.service.store, var,
-                                    self.service.backend)
+                                    self.service.backend,
+                                    incremental=self.service.incremental)
             self._readers[var] = r
         return r
 
@@ -330,9 +305,11 @@ class Session:
 class RetrievalService:
     """Multiplexes concurrent progressive-retrieval sessions over one store."""
 
-    def __init__(self, store: lo.DatasetStore, backend: str = "auto"):
+    def __init__(self, store: lo.DatasetStore, backend: str = "auto",
+                 incremental: bool = True):
         self.store = store
         self.backend = backend
+        self.incremental = incremental
         self._sessions: Dict[int, Session] = {}
         self._ids = itertools.count(1)
         self._lock = threading.Lock()
@@ -360,11 +337,13 @@ class RetrievalService:
         """Serve several (session, var, tol) requests in one batch.
 
         All requests' delta ranges are fetched through one overlapped pass,
-        then every stale chunk of every distinct reader is decoded in one
-        ``reconstruct_many`` call — same-shaped groups across sessions share
-        kernel launches.  Duplicate (session, var) pairs in one batch share
-        state: all get the (tightest) result, the fetched-byte delta is
-        attributed to the first occurrence."""
+        then the staged (still-undecoded) plane groups of every distinct
+        reader are delta-decoded in one ``reconstruct.batch_apply_pending``
+        pass — same-shaped groups across sessions share kernel launches, and
+        state decoded for earlier requests is never re-decoded.  Duplicate
+        (session, var) pairs in one batch share state: all get the
+        (tightest) result, the fetched-byte delta is attributed to the first
+        occurrence."""
         uniq: Dict[int, dict] = {}  # id(reader) -> accounting entry
         req_entries: List[Tuple[dict, bool]] = []
         # one plan per distinct chunk reader (elementwise max over duplicate
@@ -386,17 +365,15 @@ class RetrievalService:
                     target = [max(a, b) for a, b in zip(prev[1], target)]
                 plan_map[id(r)] = (r, target)
         _warm_and_fetch(list(plan_map.values()))
-        # one batched decode over every stale chunk of every distinct reader
-        stale_pairs = [(ent["vr"], ci) for ent in uniq.values()
-                       for ci in ent["vr"].stale_chunks()]
-        outs = reconstruct_many([vr.chunk_readers[ci]
-                                 for vr, ci in stale_pairs], self.backend)
-        for (vr, ci), out in zip(stale_pairs, outs):
-            vr._store_chunk(ci, out)
+        # one cross-session batched delta decode over every distinct reader's
+        # staged plane groups
+        rc.batch_apply_pending([cr.engine for ent in uniq.values()
+                                for cr in ent["vr"].chunk_readers
+                                if cr.incremental])
         results = []
         for ent, first in req_entries:
             vr = ent["vr"]
-            x, bound = vr.reconstruct()  # cache hit: decoded above
+            x, bound = vr.reconstruct()  # engines drained: delta recompose only
             fetched = (vr.total_bytes_fetched - ent["before"]) if first else 0
             ent["session"].stats.requests += 1
             ent["session"].stats.bytes_fetched += fetched

@@ -1,0 +1,200 @@
+"""Device-resident incremental reconstruction engine: bit-exactness with the
+full-decode oracle, level-reuse recompose, O(1)-sync device-resident read
+path, and cross-reader batched delta decode."""
+import numpy as np
+import jax
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import lossless as ll
+from repro.core import qoi as qq
+from repro.core import reconstruct as rcn
+from repro.core import refactor as rf
+from repro.core import retrieve as rt
+from repro.data.fields import gaussian_field
+
+RNG = np.random.default_rng(7)
+
+
+def _pair(ref, **kw):
+    """(incremental, oracle) readers over the same Refactored."""
+    return (rt.ProgressiveReader(ref, incremental=True, **kw),
+            rt.ProgressiveReader(ref, incremental=False, **kw))
+
+
+def _assert_locked(inc, orc):
+    xi, bi = inc.reconstruct()
+    xo, bo = orc.reconstruct()
+    assert bi == bo
+    assert xi.dtype == xo.dtype and xi.shape == xo.shape
+    assert np.array_equal(xi, xo, equal_nan=True)
+
+
+# ------------------------------------------------------------- bit-exactness
+
+@pytest.mark.parametrize("shape,design,levels", [
+    ((36, 36), "register_block", 2),
+    ((33, 47), "locality", 3),
+    ((2000,), "register_block", 2),
+    ((7, 9, 11), "register_block", 1),
+    ((), "register_block", 1),          # 0-d: single corner coefficient
+    ((3, 0), "register_block", 2),      # empty: every piece has n == 0
+    ((1,), "register_block", 1),        # 1 element: empty detail pieces
+])
+def test_incremental_bit_exact_over_schedule(shape, design, levels):
+    n = int(np.prod(shape, dtype=int))
+    x = (gaussian_field(shape, seed=3) if n > 4 else
+         RNG.normal(size=shape).astype(np.float32) if n else
+         np.zeros(shape, np.float32))
+    ref = rf.refactor_array(x, "t", levels=levels, design=design)
+    inc, orc = _pair(ref)
+    _assert_locked(inc, orc)  # pre-fetch: both reconstruct to zeros
+    for tol in [1e-1, 1e-3, 1e-5, 0.0]:  # 0.0 drives to the floor
+        fi = inc._fetch_to(inc.plan(max(tol, inc.floor_bound())))
+        fo = orc._fetch_to(orc.plan(max(tol, orc.floor_bound())))
+        assert fi == fo
+        _assert_locked(inc, orc)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_incremental_bit_exact_property(seed):
+    """Random shape/levels/design/schedule: the engine's delta decode +
+    suffix recompose is bit-identical to the from-scratch oracle after every
+    step, including single-group (MA) augmentation steps."""
+    rng = np.random.default_rng(seed)
+    shape = tuple(rng.integers(5, 28, size=rng.integers(1, 4)))
+    design = ["register_block", "locality"][int(rng.integers(2))]
+    levels = int(rng.integers(1, 4))
+    x = gaussian_field(shape, slope=float(rng.uniform(-3, -1)), seed=seed)
+    ref = rf.refactor_array(x, "p", levels=levels, design=design,
+                            hybrid=ll.HybridConfig(group_size=int(rng.integers(2, 9))))
+    inc, orc = _pair(ref)
+    for tol in sorted(10.0 ** rng.uniform(-6, -1, size=3))[::-1]:
+        inc.retrieve(float(tol))
+        orc.retrieve(float(tol))
+        _assert_locked(inc, orc)
+    for _ in range(2):  # finest augmentation granularity
+        inc.fetch_one_more_group()
+        orc.fetch_one_more_group()
+        _assert_locked(inc, orc)
+
+
+def test_incremental_reconstruct_idempotent():
+    """A clean engine serves the cached array (same object, no recompute)."""
+    x = gaussian_field((40, 40), seed=5)
+    r = rt.ProgressiveReader(rf.refactor_array(x, "t", levels=2))
+    r.retrieve(1e-3)
+    x1, _ = r.reconstruct_device()
+    before = rcn.STATS.snapshot()
+    x2, _ = r.reconstruct_device()
+    after = rcn.STATS.snapshot()
+    assert x2 is x1
+    assert after["cache_hits"] == before["cache_hits"] + 1
+    assert after["recompose_calls"] == before["recompose_calls"]
+
+
+def test_level_reuse_on_fine_detail_refinement():
+    """Refining only the finest detail piece re-runs only the last recompose
+    stage; the coarser level intermediates are served from the cache."""
+    x = gaussian_field((64, 64), seed=6)
+    ref = rf.refactor_array(x, "t", levels=3)
+    inc, orc = _pair(ref)
+    inc.retrieve(1e-2)
+    orc.retrieve(1e-2)
+    finest = len(ref.pieces) - 1
+    target = [s.groups_fetched for s in inc.state]
+    target[finest] += 1
+    before = rcn.STATS.snapshot()
+    inc._fetch_to(target)
+    inc.reconstruct_device()
+    after = rcn.STATS.snapshot()
+    assert after["levels_merged"] - before["levels_merged"] == 1
+    assert after["levels_reused"] - before["levels_reused"] == ref.levels - 1
+    orc._fetch_to(target)
+    _assert_locked(inc, orc)
+
+
+# --------------------------------------------------------------- sync budget
+
+def test_read_path_O1_host_syncs(monkeypatch):
+    """The incremental read path performs exactly ONE host sync per fetch
+    step (the batched lossless payload sync) regardless of how many (piece,
+    group) deltas the step pulls, never invokes the per-group codec decoders,
+    and keeps the reconstruction on device (mirrors the write-path test in
+    tests/test_lossless_batch.py)."""
+    from repro.core import lossless_batch as lb
+
+    def forbid(*a, **kw):
+        raise AssertionError("per-group codec invoked on the batched path")
+
+    monkeypatch.setattr(ll, "decompress_group", forbid)
+    monkeypatch.setattr(ll, "huffman_decode", forbid)
+    monkeypatch.setattr(ll, "rle_decode", forbid)
+    monkeypatch.setattr(ll, "dc_decode", forbid)
+
+    x = gaussian_field((48, 48), slope=-2.0, seed=8)
+    # force=huffman: every segment goes through the vmapped unpack batch, so
+    # each fetch step costs exactly its single payload sync
+    r = rt.ProgressiveReader(rf.refactor_array(
+        x, "t", levels=3, hybrid=ll.HybridConfig(force="huffman")))
+    lb.STATS.reset()
+    for step, tol in enumerate([1e-2, 1e-4, 1e-6]):
+        r.retrieve_device(tol)
+        # one decode_segments payload sync per step, independent of the
+        # number of segments the plan fetched
+        assert lb.STATS.snapshot()["host_syncs"] == step + 1
+    out, _ = r.reconstruct_device()
+    assert isinstance(out, jax.Array)
+    assert lb.STATS.snapshot()["host_syncs"] == 3  # reconstruct adds none
+
+
+def test_cross_reader_batched_delta_decode():
+    """Same-shaped staged groups of different readers decode through shared
+    vmapped launches (the store's cross-session serving batch)."""
+    from repro.store.service import reconstruct_many
+    x = gaussian_field((30, 30), seed=9)
+    ref = rf.refactor_array(x, "t", levels=2)
+    readers = [rt.ProgressiveReader(ref) for _ in range(4)]
+    for r in readers:
+        r._fetch_to(r.plan(1e-4))
+    staged = sum(len(r.engine._pending) for r in readers)
+    before = rcn.STATS.snapshot()
+    outs = reconstruct_many(readers)
+    after = rcn.STATS.snapshot()
+    assert staged > 0
+    # 4 readers' identical group shapes collapse into per-shape buckets
+    assert after["delta_decode_batches"] - before["delta_decode_batches"] \
+        == staged // len(readers)
+    ref_out = np.asarray(outs[0][0])
+    for o, b in outs[1:]:
+        assert np.array_equal(np.asarray(o), ref_out)
+    assert np.abs(ref_out - x).max() <= outs[0][1]
+
+
+# ------------------------------------------------------------- CP halving cap
+
+def test_cp_halving_loop_bounded():
+    """Satellite: the CP estimator's eps-halving loop is capped — a
+    pathological (denormal) tau terminates instead of spinning through
+    hundreds of subnormal halvings."""
+    x = np.full((1,), 0.5, np.float32)
+    r = rf.refactor_array(x, "s")
+    res = qq.progressive_qoi_retrieve([rt.ProgressiveReader(r)],
+                                      qq.QoI("sum_squares"), 5e-324,
+                                      method="cp", max_iters=5)
+    assert res.iterations <= 5  # terminated; cap kept each iteration finite
+
+
+def test_qoi_bitrate_mixed_size_fleet():
+    """Satellite: bitrate normalizes by the summed element counts of a
+    mixed-size fleet (e.g. a field plus a broadcastable scalar parameter),
+    not n_elements[0] * n_vars."""
+    a = gaussian_field((4096,), seed=1)
+    b = np.full((1,), 0.75, np.float32)  # broadcasts against the field
+    readers = [rt.ProgressiveReader(rf.refactor_array(v, n))
+               for v, n in [(a, "a"), (b, "b")]]
+    res = qq.progressive_qoi_retrieve(readers, qq.V_TOTAL, 1e-1, method="mape")
+    assert res.bytes_fetched > 0
+    assert res.bitrate == pytest.approx(
+        8.0 * res.bytes_fetched / (a.size + b.size))
