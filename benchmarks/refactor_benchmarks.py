@@ -1,0 +1,131 @@
+"""Write-path benchmark: fused one-dispatch encode vs the per-piece path.
+
+Measures, through the chunked refactor pipeline (pipelined mode, the paper's
+Fig-4 DAG), the two costs the fused engine removes:
+
+  * jitted-dispatch count per chunk at the tracked dispatch sites
+    (``align_encode`` + ``encode_bitplanes`` + the fused program launch):
+    the fused path launches ONE program per chunk, the per-piece path ~3 per
+    piece — and that undercounts the per-piece path, whose eager multilevel
+    decompose adds several more dispatches per level;
+  * end-to-end write throughput (fused must be >= per-piece — the CI
+    acceptance check).
+
+Emits CSV rows and writes ``out/benchmarks/refactor_benchmarks.json`` (same
+artifact convention as ``qoi_benchmarks`` / ``store_serving``).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from benchmarks.common import row, timeit, write_json
+from repro.core import align as al
+from repro.core import lossless_batch as lb
+from repro.core import pipeline as pl
+from repro.core import refactor_fused as rff
+from repro.kernels import ops as kops
+from repro.data.fields import gaussian_field
+
+CHUNK_ELEMS = 1 << 16
+N_CHUNKS = 6
+LEVELS = 3
+
+
+class _DispatchCounter:
+    """Counts Python-level invocations of the per-piece jitted dispatch
+    sites; each call is one XLA dispatch on a warm cache."""
+
+    def __init__(self):
+        self.count = 0
+        self._saved = []
+
+    def __enter__(self):
+        for mod, name in [(kops, "encode_bitplanes"),
+                          (kops, "encode_bitplanes_batch"),
+                          (al, "align_encode")]:
+            orig = getattr(mod, name)
+            self._saved.append((mod, name, orig))
+
+            def wrapper(*a, _orig=orig, **kw):
+                self.count += 1
+                return _orig(*a, **kw)
+
+            setattr(mod, name, wrapper)
+        return self
+
+    def __exit__(self, *exc):
+        for mod, name, orig in self._saved:
+            setattr(mod, name, orig)
+
+
+def _run_mode(x: np.ndarray, fused: bool) -> Dict:
+    def make_pipe():
+        return pl.ChunkedRefactorPipeline(chunk_elems=CHUNK_ELEMS,
+                                          pipelined=True, levels=LEVELS,
+                                          fused=fused)
+
+    make_pipe().refactor(x, "warmup")  # compile/plan caches
+    lb.STATS.reset()
+    rff.STATS.reset()
+    with _DispatchCounter() as dc:
+        pipe = make_pipe()
+        pipe.refactor(x, "count")
+    chunks = pipe.stats.chunks
+    snap = lb.STATS.snapshot()
+    fused_snap = rff.STATS.snapshot()
+    dispatches = dc.count + (fused_snap["dispatches"] if fused else 0)
+
+    secs = timeit(lambda: make_pipe().refactor(x, "bench"), warmup=1, iters=3)
+    return {
+        "fused": fused,
+        "seconds": secs,
+        "throughput_gbps": x.nbytes / secs / 1e9,
+        "chunks": chunks,
+        "dispatches_per_chunk": dispatches / chunks,
+        "host_syncs_per_chunk": snap["host_syncs"] / chunks,
+        "codec_host_syncs": snap["host_syncs"],
+    }
+
+
+def run() -> list:
+    x = gaussian_field((N_CHUNKS * CHUNK_ELEMS,), slope=-2.0, seed=12)
+    per_piece = _run_mode(x, fused=False)
+    fused = _run_mode(x, fused=True)
+    result = {
+        "chunk_elems": CHUNK_ELEMS,
+        "n_chunks": N_CHUNKS,
+        "levels": LEVELS,
+        "bytes_in": int(x.nbytes),
+        "per_piece": per_piece,
+        "fused": fused,
+        "speedup": per_piece["seconds"] / fused["seconds"],
+        # CI acceptance: strictly fewer dispatches AND >= throughput
+        "dispatch_reduction": (per_piece["dispatches_per_chunk"]
+                               / max(fused["dispatches_per_chunk"], 1e-9)),
+        "fused_dispatches_below_per_piece": (
+            fused["dispatches_per_chunk"] < per_piece["dispatches_per_chunk"]),
+        "fused_throughput_ge_per_piece": (
+            fused["throughput_gbps"] >= per_piece["throughput_gbps"]),
+    }
+    write_json("refactor_benchmarks", result)
+    lines = []
+    for mode in (per_piece, fused):
+        tag = "fused" if mode["fused"] else "per_piece"
+        lines.append(row(
+            f"refactor_write_{tag}", mode["seconds"],
+            f"tput={mode['throughput_gbps']:.4f}GBps;"
+            f"dispatches_per_chunk={mode['dispatches_per_chunk']:.1f};"
+            f"syncs_per_chunk={mode['host_syncs_per_chunk']:.1f}"))
+    lines.append(row(
+        "refactor_write_fused_vs_per_piece", fused["seconds"],
+        f"speedup={result['speedup']:.2f}x;"
+        f"dispatch_reduction={result['dispatch_reduction']:.1f}x;"
+        f"dispatches_ok={result['fused_dispatches_below_per_piece']};"
+        f"throughput_ok={result['fused_throughput_ge_per_piece']}"))
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

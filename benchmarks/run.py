@@ -18,6 +18,7 @@ MODULES = [
     "bitplane_designs",
     "lossless_strategies",
     "pipeline_overlap",
+    "refactor_benchmarks",
     "weak_scaling",
     "end_to_end",
     "qoi_benchmarks",

@@ -26,11 +26,14 @@ Write path (``encode_groups``), per call:
      payload of the chunk; host code only trims per-row tails.
 
 That is the one-big-sync-per-chunk contract: exactly two host syncs per
-``encode_groups`` call (plus one in ``repro.core.refactor.refactor_array``
-for the alignment scalars), and O(#pieces) kernel launches — independent of
-how many merged groups the chunk decomposes into.  Outputs are
-**bit-identical** to running ``lossless.compress_group`` per group
-(tests/test_lossless_batch.py checks serialized bytes).
+``encode_groups`` call (plus one for the alignment scalars — in
+``repro.core.refactor.refactor_array`` on the piece-at-a-time path, in
+``repro.core.refactor_fused.finish_encode`` on the default fused path),
+and O(#pieces) kernel launches — independent of how many merged groups the
+chunk decomposes into.  ``encode_groups_stacked`` is the same engine for
+blob rows the fused write program already stacked on device (no re-slice).
+Outputs are **bit-identical** to running ``lossless.compress_group`` per
+group (tests/test_lossless_batch.py checks serialized bytes).
 
 Read path (``decode_segments``): all same-shape Huffman (resp. RLE)
 segments of a request are decoded through one vmapped
@@ -251,7 +254,63 @@ def encode_groups(blobs: Sequence[jax.Array],
         s: jnp.stack([jnp.asarray(blobs[i], dtype=jnp.uint8).reshape(-1)
                       for i in idxs])
         for s, idxs in buckets.items()}
+    _encode_buckets(stacked, buckets, segs, cfg)
+    return segs
 
+
+def encode_groups_stacked(stacks: Sequence[jax.Array],
+                          cfg: ll.HybridConfig = ll.HybridConfig()
+                          ) -> List[ll.Segment]:
+    """``encode_groups`` for blobs that are ALREADY stacked on device.
+
+    ``stacks`` are (B, S) uint8 device arrays — one group blob per row, as
+    emitted by the fused write engine (``core.refactor_fused``): the chunk's
+    single jitted program produces each same-size blob family as one stacked
+    array, so this entry point never re-slices or re-stacks rows.  Same-size
+    stacks are merged (one ``jnp.concatenate`` per size) so the kernel-batch
+    count stays O(#distinct sizes), exactly as ``encode_groups``.
+
+    Returns one ``lossless.Segment`` per row, flattened row-major across
+    ``stacks`` — bit-identical to calling ``encode_groups`` on the individual
+    rows, with the engine's same two host syncs."""
+    sizes: List[int] = []
+    for st in stacks:
+        s = int(st.shape[1])
+        ll._check_group_size(s)  # before any dispatch
+        sizes.extend([s] * int(st.shape[0]))
+    if not sizes:
+        return []
+    STATS.add(encode_calls=1, groups_encoded=len(sizes))
+
+    segs: List[Optional[ll.Segment]] = [None] * len(sizes)
+    buckets: Dict[int, List[int]] = {}
+    parts: Dict[int, List[jax.Array]] = {}
+    base = 0
+    for st in stacks:
+        b, s = int(st.shape[0]), int(st.shape[1])
+        if s == 0:
+            for i in range(base, base + b):
+                segs[i] = ll.compress_group(np.zeros(0, np.uint8), cfg)
+        else:
+            buckets.setdefault(s, []).extend(range(base, base + b))
+            parts.setdefault(s, []).append(jnp.asarray(st, jnp.uint8))
+        base += b
+    if not buckets:
+        return segs
+
+    stacked = {s: (p[0] if len(p) == 1 else jnp.concatenate(p))
+               for s, p in parts.items()}
+    _encode_buckets(stacked, buckets, segs, cfg)
+    return segs
+
+
+def _encode_buckets(stacked: Dict[int, jax.Array],
+                    buckets: Dict[int, List[int]],
+                    segs: List[Optional[ll.Segment]],
+                    cfg: ll.HybridConfig) -> None:
+    """Shared stages 1-3 of the batched encoder: device stats (sync #1),
+    host-side Algorithm-2 selection, vmapped pack/scan (sync #2).  Fills
+    ``segs`` at the indices listed in ``buckets``."""
     # stage 1: all histograms + run counts, one launch per bucket, ONE sync
     stats_dev = {}
     for s, st in stacked.items():
@@ -322,7 +381,6 @@ def encode_groups(blobs: Sequence[jax.Array],
             for j, i in enumerate(idxs):
                 segs[i] = ll.Segment("dc", s, {"raw": mat[j].copy()},
                                      {"n_syms": s})
-    return segs
 
 
 # ------------------------------------------------------------------- decode --

@@ -16,12 +16,27 @@ Fig-4 dependency edges enforced:
   reconstruct: X -> I (input prefetch delayed until decompress done)
                X -> O (store of previous result delayed until decode start)
 
+Dispatch-ahead (fused write path): with ``fused=True`` the compute stage is
+split into *dispatch* (one jitted launch of the whole decompose -> quantize
+-> bitplane-encode chain per chunk, ``core.refactor_fused``) and *finish*
+(host-side lossless selection + manifest assembly, which synchronizes).
+The refactor driver keeps up to ``dispatch_ahead`` (>= 2 by default)
+dispatched chunks in flight, so chunk k+1's fused encode runs on device
+while chunk k's lossless pack and serialize run on host.  To keep the
+pipelined path sync-free per chunk, ``_copy_in`` only calls
+``block_until_ready`` when stage timing is enabled (``stage_timing``,
+default: serial mode only) — stage timers need the barrier, the overlap
+path must not pay it.  ``overlap_map``'s feeder look-ahead is likewise
+configurable (``depth``) on the reconstruct pipeline and the store
+retrieval service.
+
 On TPU/GPU the copies are real DMA transfers; on this CPU container they are
 host memcpys, so the measured overlap is structural rather than
 bandwidth-bound (benchmarks report both pipelined and serial modes).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import queue
 import threading
@@ -34,6 +49,7 @@ import numpy as np
 
 from repro.core import lossless as ll
 from repro.core import refactor as rf
+from repro.core import refactor_fused as rff
 from repro.core import retrieve as rtv
 
 
@@ -54,6 +70,12 @@ class PipelineStats:
 
 def _chunk_slices(n: int, chunk: int) -> List[slice]:
     return [slice(i, min(i + chunk, n)) for i in range(0, n, chunk)]
+
+
+def _sync_stage(dev) -> None:
+    """Hard device barrier for stage timing.  Module-level so tests can
+    count that the pipelined write path never calls it per chunk."""
+    jax.block_until_ready(dev)
 
 
 def _block_stage(out):
@@ -139,7 +161,16 @@ class ChunkedRefactorPipeline:
 
     ``pipelined=False`` executes the same stages strictly serially (the
     paper's Fig-9 baseline); ``pipelined=True`` overlaps the three queues
-    with the Fig-4 dependency edges.
+    with the Fig-4 dependency edges, and additionally dispatch-ahead: the
+    fused write engine launches chunk k+1's whole encode chain (one jitted
+    dispatch) before chunk k's host-side lossless/serialize work runs, up
+    to ``dispatch_ahead`` chunks in flight.
+
+    ``stage_timing`` controls whether stages hard-synchronize so the
+    per-stage timers attribute execution rather than dispatch.  Default is
+    ``None``: enabled in serial mode (the stage-sum contract of
+    tests/test_pipeline_stats.py), disabled in pipelined mode — the overlap
+    path must not pay a per-chunk ``block_until_ready``.
     """
 
     def __init__(self, chunk_elems: int = 1 << 20, pipelined: bool = True,
@@ -147,7 +178,9 @@ class ChunkedRefactorPipeline:
                  hybrid: ll.HybridConfig = ll.HybridConfig(),
                  backend: str = "auto",
                  mag_bits: Optional[int] = None,
-                 sink: Optional[Callable[[int, rf.Refactored], bytes]] = None):
+                 sink: Optional[Callable[[int, rf.Refactored], bytes]] = None,
+                 fused: bool = True, dispatch_ahead: int = 2,
+                 stage_timing: Optional[bool] = None):
         self.chunk_elems = chunk_elems
         self.pipelined = pipelined
         self.levels = levels
@@ -159,25 +192,53 @@ class ChunkedRefactorPipeline:
         # address individual segments (repro.store.writer) instead of getting
         # one opaque blob per chunk.  Chunks reach the sink in index order.
         self.sink = sink
+        self.fused = fused
+        self.dispatch_ahead = max(int(dispatch_ahead), 1)
+        self.stage_timing = (not pipelined) if stage_timing is None \
+            else bool(stage_timing)
         self.stats = PipelineStats()
 
     # -- stages ------------------------------------------------------------
     def _copy_in(self, host_chunk: np.ndarray) -> jax.Array:
         t0 = time.perf_counter()
         dev = jax.device_put(host_chunk)
-        dev.block_until_ready()
+        if self.stage_timing:
+            # barrier so copy_in_s measures the transfer, not its dispatch;
+            # skipped on the overlap path (no per-chunk sync)
+            _sync_stage(dev)
         self.stats.copy_in_s += time.perf_counter() - t0
         return dev
 
-    def _compute(self, dev_chunk: jax.Array, name: str) -> rf.Refactored:
+    def _dispatch(self, dev_chunk: jax.Array, name: str):
+        """Launch one chunk's encode.  Fused mode: ONE jitted dispatch, no
+        sync — returns a ``refactor_fused.PendingChunk`` whose device work
+        overlaps later host stages.  Non-fused: the full per-piece compute
+        (returns the finished ``Refactored``)."""
         t0 = time.perf_counter()
         kw = {} if self.mag_bits is None else {"mag_bits": self.mag_bits}
-        out = _block_stage(
-            rf.refactor_array(dev_chunk, name=name, levels=self.levels,
-                              design=self.design, hybrid=self.hybrid,
-                              backend=self.backend, **kw))
+        if self.fused:
+            out = rff.dispatch_encode(dev_chunk, name=name, levels=self.levels,
+                                      design=self.design, hybrid=self.hybrid,
+                                      backend=self.backend, **kw)
+        else:
+            out = rf.refactor_array(dev_chunk, name=name, levels=self.levels,
+                                    design=self.design, hybrid=self.hybrid,
+                                    backend=self.backend, fused=False, **kw)
         self.stats.compute_s += time.perf_counter() - t0
         return out
+
+    def _finish(self, pending) -> rf.Refactored:
+        """Resolve a dispatched chunk (fused: scalar sync + lossless engine)."""
+        t0 = time.perf_counter()
+        out = (rff.finish_encode(pending)
+               if isinstance(pending, rff.PendingChunk) else pending)
+        if self.stage_timing:
+            out = _block_stage(out)
+        self.stats.compute_s += time.perf_counter() - t0
+        return out
+
+    def _compute(self, dev_chunk: jax.Array, name: str) -> rf.Refactored:
+        return self._finish(self._dispatch(dev_chunk, name))
 
     def _copy_out(self, ci: int, refd: rf.Refactored) -> bytes:
         t0 = time.perf_counter()
@@ -234,6 +295,10 @@ class ChunkedRefactorPipeline:
             t1 = threading.Thread(target=prefetcher, daemon=True)
             t3 = threading.Thread(target=serializer, daemon=True)
             t1.start(); t3.start()
+            # dispatch-ahead window: chunk k+1's fused encode is dispatched
+            # (in flight on device) before chunk k's finish (host lossless
+            # selection + pack) runs — up to ``dispatch_ahead`` chunks deep.
+            inflight: "collections.deque[tuple]" = collections.deque()
             try:
                 while True:
                     ci, dev = prefetch_q.get()
@@ -241,8 +306,19 @@ class ChunkedRefactorPipeline:
                         break
                     if errors:
                         continue  # drain the prefetcher; skip further compute
-                    refd = self._compute(dev, f"{name}.{ci}")  # I -> Z honored
-                    out_q.put((ci, refd))                  # O overlaps next compute
+                    pend = self._dispatch(dev, f"{name}.{ci}")
+                    if isinstance(pend, rf.Refactored):
+                        # non-fused: _dispatch already completed the chunk;
+                        # buffering it would only delay the serializer
+                        out_q.put((ci, pend))
+                        continue
+                    inflight.append((ci, pend))
+                    while len(inflight) >= self.dispatch_ahead:
+                        cj, pend = inflight.popleft()
+                        out_q.put((cj, self._finish(pend)))  # O overlaps next
+                while inflight and not errors:
+                    cj, pend = inflight.popleft()
+                    out_q.put((cj, self._finish(pend)))
             except BaseException as exc:  # noqa: BLE001 - compute failed
                 errors.append(exc)
                 while ci >= 0:  # release the prefetcher parked on its put
@@ -266,13 +342,18 @@ class ChunkedReconstructPipeline:
     (``incremental=True``, default): the compute stage decodes the fetched
     plane groups once, keeps the reconstruction on device, and only the
     final concatenation (the D2H copy-out of Fig 4b) pulls results to host.
-    ``incremental=False`` drives the from-scratch oracle readers instead."""
+    ``incremental=False`` drives the from-scratch oracle readers instead.
+
+    ``depth`` is the overlap feeder's look-ahead (``overlap_map`` depth):
+    how many chunks may sit deserialized+fetched ahead of the compute
+    stage.  Order and exception propagation are preserved at any depth."""
 
     def __init__(self, pipelined: bool = True, backend: str = "auto",
-                 incremental: bool = True):
+                 incremental: bool = True, depth: int = 2):
         self.pipelined = pipelined
         self.backend = backend
         self.incremental = incremental
+        self.depth = max(int(depth), 1)
         self.stats = PipelineStats()
 
     def reconstruct(self, blobs: Sequence[bytes], tol: float) -> np.ndarray:
@@ -299,11 +380,11 @@ class ChunkedReconstructPipeline:
             self.stats.compute_s += time.perf_counter() - t0
             self.stats.bytes_in += fetched
 
-        # X -> I edge: the next chunk's deserialization+fetch happens on the
-        # overlap_map feeder thread, released only after this chunk's
-        # decompress (queue depth 1).
+        # X -> I edge: upcoming chunks' deserialization+fetch happens on the
+        # overlap_map feeder thread, at most ``depth`` chunks ahead of the
+        # compute stage.
         overlap_map(len(blobs), decompress, recompose,
-                    pipelined=self.pipelined)
+                    pipelined=self.pipelined, depth=self.depth)
 
         self.stats.chunks += len(blobs)
         t0 = time.perf_counter()

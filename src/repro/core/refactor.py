@@ -106,16 +106,30 @@ def refactor_array(
     hybrid: ll.HybridConfig = ll.HybridConfig(),
     backend: str = "auto",
     batched: bool = True,
+    fused: Optional[bool] = None,
 ) -> Refactored:
     """Refactor one array.
 
-    With ``batched=True`` (default) magnitudes -> bitplanes -> merged-group
-    byte blobs stay on device end-to-end and all lossless work of the chunk
-    runs through ``lossless_batch.encode_groups`` — O(1) host syncs total
-    (one for the alignment scalars, two inside the engine) instead of one
-    round-trip per (piece, group).  ``batched=False`` is the original
-    per-group path; both produce byte-identical serializations.
+    With ``fused=True`` (the default when ``batched``) the WHOLE encode
+    chain — decompose, alignment/quantization, bitplane encode, group blob
+    slicing, and the scalar pass — runs as ONE cached jitted dispatch per
+    chunk through ``refactor_fused`` (see that module); the lossless engine
+    then consumes the stacked blob rows directly.  ``fused=False,
+    batched=True`` is the piece-at-a-time device-resident path (~3 jitted
+    dispatches per piece); ``batched=False`` the original per-group path.
+    All three produce byte-identical serializations — the slower paths stay
+    as bit-exactness oracles.
     """
+    if fused is None:
+        fused = batched
+    elif fused and not batched:
+        raise ValueError("fused=True requires batched=True: the fused engine "
+                         "replaces the batched path, not the per-group oracle")
+    if fused and batched:
+        from repro.core import refactor_fused as rff  # local: no import cycle
+        return rff.refactor_fused(x, name=name, levels=levels, design=design,
+                                  mag_bits=mag_bits, hybrid=hybrid,
+                                  backend=backend)
     x = jnp.asarray(x, dtype=jnp.float32)
     if levels is None:
         levels = dc.num_levels(x.shape)

@@ -58,6 +58,21 @@ def decode_bitplanes(planes: jax.Array, num_planes_total: int, n: int,
                              interpret=(b == "pallas_interpret"))
 
 
+@functools.partial(jax.jit, static_argnames=("num_planes", "design", "backend",
+                                             "tiles_per_block", "unroll"))
+def encode_bitplanes_batch(mags: jax.Array, num_planes: int,
+                           design: str = "register_block",
+                           backend: str = _DEFAULT_BACKEND,
+                           tiles_per_block: int = 8,
+                           unroll: str = "butterfly") -> jax.Array:
+    """(B, N) uint32 magnitudes -> (B, num_planes, W): one vmapped launch for
+    B same-length encodes — the write-side twin of ``decode_bitplanes_batch``.
+    Used by the fused write engine (``core.refactor_fused``) to encode every
+    same-padded-size piece of a chunk in a single dispatch."""
+    return jax.vmap(lambda m: encode_bitplanes(
+        m, num_planes, design, backend, tiles_per_block, unroll))(mags)
+
+
 @functools.partial(jax.jit, static_argnames=("num_planes_total", "n", "design",
                                              "backend", "tiles_per_block",
                                              "unroll"))

@@ -124,12 +124,14 @@ class StoreVariableReader:
     # no cross-chunk batching or caching.  It exists for bit-exactness
     # debugging against the engine, not for serving.
     def __init__(self, store: lo.DatasetStore, name: str,
-                 backend: str = "auto", incremental: bool = True):
+                 backend: str = "auto", incremental: bool = True,
+                 depth: int = 2):
         var = store.variable(name)
         self.var = var
         self.name = name
         self.backend = backend
         self.incremental = incremental
+        self.depth = max(int(depth), 1)  # overlap feeder look-ahead
         self.chunk_readers = [
             ProgressiveReader(lo.chunk_refactored(var, ci), backend=backend,
                               source=StoreSegmentSource(store, name, ci),
@@ -219,7 +221,8 @@ class StoreVariableReader:
                         ) -> Tuple[jax.Array, float, int]:
         if relative:
             tol = tol * self.var.range
-        fetched = _warm_and_fetch([(r, r.plan(tol)) for r in self.chunk_readers])
+        fetched = _warm_and_fetch([(r, r.plan(tol)) for r in self.chunk_readers],
+                                  depth=self.depth)
         x, bound = self.reconstruct_device()
         return x, bound, fetched
 
@@ -230,9 +233,11 @@ class StoreVariableReader:
         return x, bound, fetched
 
 
-def _warm_and_fetch(plans: List[Tuple[ProgressiveReader, List[int]]]) -> int:
+def _warm_and_fetch(plans: List[Tuple[ProgressiveReader, List[int]]],
+                    depth: int = 2) -> int:
     """Overlapped fetch of many chunk plans: backend I/O (cache warming) on
-    the feeder thread, lossless decompress on the caller thread."""
+    the feeder thread, at most ``depth`` plans ahead of the lossless
+    decompress running on the caller thread."""
     def warm(i: int):
         r, target = plans[i]
         wants = r.pending_deltas(target)
@@ -243,7 +248,7 @@ def _warm_and_fetch(plans: List[Tuple[ProgressiveReader, List[int]]]) -> int:
     def fetch(i: int, target) -> int:
         return plans[i][0]._fetch_to(target)
 
-    return sum(pl.overlap_map(len(plans), warm, fetch, depth=2))
+    return sum(pl.overlap_map(len(plans), warm, fetch, depth=depth))
 
 
 # ---------------------------------------------------------------- sessions --
@@ -271,7 +276,8 @@ class Session:
         if r is None:
             r = StoreVariableReader(self.service.store, var,
                                     self.service.backend,
-                                    incremental=self.service.incremental)
+                                    incremental=self.service.incremental,
+                                    depth=self.service.depth)
             self._readers[var] = r
         return r
 
@@ -306,10 +312,11 @@ class RetrievalService:
     """Multiplexes concurrent progressive-retrieval sessions over one store."""
 
     def __init__(self, store: lo.DatasetStore, backend: str = "auto",
-                 incremental: bool = True):
+                 incremental: bool = True, depth: int = 2):
         self.store = store
         self.backend = backend
         self.incremental = incremental
+        self.depth = max(int(depth), 1)  # overlap feeder look-ahead
         self._sessions: Dict[int, Session] = {}
         self._ids = itertools.count(1)
         self._lock = threading.Lock()
@@ -364,7 +371,7 @@ class RetrievalService:
                 if prev is not None:
                     target = [max(a, b) for a, b in zip(prev[1], target)]
                 plan_map[id(r)] = (r, target)
-        _warm_and_fetch(list(plan_map.values()))
+        _warm_and_fetch(list(plan_map.values()), depth=self.depth)
         # one cross-session batched delta decode over every distinct reader's
         # staged plane groups
         rc.batch_apply_pending([cr.engine for ent in uniq.values()

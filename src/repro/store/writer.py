@@ -62,7 +62,8 @@ class DatasetWriter:
                  design: str = "register_block",
                  mag_bits: Optional[int] = None,
                  hybrid: ll.HybridConfig = ll.HybridConfig(),
-                 pipelined: bool = True, backend: str = "auto"):
+                 pipelined: bool = True, backend: str = "auto",
+                 fused: bool = True, dispatch_ahead: int = 2):
         self.root = root
         self.chunk_elems = int(chunk_elems)
         self.levels = levels
@@ -71,6 +72,10 @@ class DatasetWriter:
         self.hybrid = hybrid
         self.pipelined = pipelined
         self.backend = backend
+        # fused one-dispatch write engine + in-flight encode depth (see
+        # core.refactor_fused / ChunkedRefactorPipeline dispatch-ahead)
+        self.fused = fused
+        self.dispatch_ahead = dispatch_ahead
         self._finalized = False
         self._written: set = set()
         os.makedirs(root, exist_ok=True)
@@ -115,7 +120,8 @@ class DatasetWriter:
         pipe = pl.ChunkedRefactorPipeline(
             chunk_elems=self.chunk_elems, pipelined=self.pipelined,
             levels=levels, design=self.design, hybrid=self.hybrid,
-            backend=self.backend, mag_bits=self.mag_bits, sink=sink)
+            backend=self.backend, mag_bits=self.mag_bits, sink=sink,
+            fused=self.fused, dispatch_ahead=self.dispatch_ahead)
         try:
             pipe.refactor(flat, name=name)
         finally:

@@ -66,6 +66,51 @@ def test_roundtrip_property(n, planes, seed):
     assert np.array_equal(np.asarray(dec), mag)
 
 
+@pytest.mark.parametrize("design", DESIGNS)
+def test_unroll_naive_butterfly_parity_interpret(design):
+    """unroll='naive' and unroll='butterfly' are execution strategies, not
+    formats: encode and decode must be bit-identical across all three Pallas
+    designs (for locality/shuffle the knob is inert by design)."""
+    rng = np.random.default_rng(13)
+    n, planes = 5000, 12
+    mag = rng.integers(0, 2 ** planes, n).astype(np.uint32)
+    encs = {u: np.asarray(ops.encode_bitplanes(
+        jnp.asarray(mag), planes, design, backend="pallas_interpret",
+        unroll=u)) for u in ("naive", "butterfly")}
+    assert np.array_equal(encs["naive"], encs["butterfly"])
+    assert np.array_equal(encs["naive"],
+                          np.asarray(ref.encode(jnp.asarray(mag), planes,
+                                                design)))
+    prefix = jnp.asarray(encs["naive"][:5])
+    decs = {u: np.asarray(ops.decode_bitplanes(
+        prefix, planes, n, design, backend="pallas_interpret", unroll=u))
+        for u in ("naive", "butterfly")}
+    assert np.array_equal(decs["naive"], decs["butterfly"])
+    assert np.array_equal(decs["naive"],
+                          np.asarray(ref.decode(prefix, planes, n, design)))
+
+
+@pytest.mark.parametrize("design", DESIGNS)
+@pytest.mark.parametrize("unroll", ["naive", "butterfly"])
+def test_tiles_per_block_sweep_identical(design, unroll):
+    """tiles_per_block only changes the grid blocking — 1/4/8 must produce
+    identical planes and identical decodes."""
+    rng = np.random.default_rng(29)
+    n, planes = 13000, 10  # > 8 tiles, not a whole block at any sweep point
+    mag = rng.integers(0, 2 ** planes, n).astype(np.uint32)
+    encs = [np.asarray(ops.encode_bitplanes(
+        jnp.asarray(mag), planes, design, backend="pallas_interpret",
+        tiles_per_block=t, unroll=unroll)) for t in (1, 4, 8)]
+    assert np.array_equal(encs[0], encs[1])
+    assert np.array_equal(encs[0], encs[2])
+    prefix = jnp.asarray(encs[0][:7])
+    decs = [np.asarray(ops.decode_bitplanes(
+        prefix, planes, n, design, backend="pallas_interpret",
+        tiles_per_block=t, unroll=unroll)) for t in (1, 4, 8)]
+    assert np.array_equal(decs[0], decs[1])
+    assert np.array_equal(decs[0], decs[2])
+
+
 def test_formats_are_distinct_but_sizes_equal():
     rng = np.random.default_rng(3)
     mag = rng.integers(0, 2 ** 30, 8192).astype(np.uint32)

@@ -1,9 +1,14 @@
-"""Chunked-pipeline regressions: empty-input handling and async-dispatch-safe
-stage timing (PipelineStats must attribute execution, not dispatch)."""
+"""Chunked-pipeline regressions: empty-input handling, async-dispatch-safe
+stage timing (PipelineStats must attribute execution, not dispatch), and
+overlap_map depth>1 ordering/exception contracts."""
+import threading
+import time
+
 import numpy as np
+import pytest
 
 from repro.core.pipeline import (ChunkedReconstructPipeline,
-                                 ChunkedRefactorPipeline)
+                                 ChunkedRefactorPipeline, overlap_map)
 from repro.data.fields import gaussian_field
 
 
@@ -21,6 +26,91 @@ def test_empty_array_through_both_pipelines():
         np.zeros((0,), np.float32), "e")
     out = ChunkedReconstructPipeline(pipelined=False).reconstruct(blobs, 1e-3)
     assert out.shape == (0,)
+
+
+@pytest.mark.parametrize("depth", [2, 3, 7])
+def test_overlap_map_depth_preserves_order(depth):
+    """The feeder may run ``depth`` items ahead; results must still land in
+    order even when stage-1 latencies are adversarial."""
+    rng = np.random.default_rng(depth)
+    delays = rng.uniform(0, 0.004, 12)
+    seen_ahead = []
+
+    def stage1(i):
+        time.sleep(delays[i])
+        return i * 10
+
+    done = [-1]
+
+    def stage2(i, s1):
+        seen_ahead.append(i - done[0])
+        done[0] = i
+        time.sleep(0.002)
+        assert s1 == i * 10
+        return i
+
+    out = overlap_map(12, stage1, stage2, pipelined=True, depth=depth)
+    assert out == list(range(12))
+    assert all(a == 1 for a in seen_ahead)  # stage2 strictly in order
+
+
+@pytest.mark.parametrize("depth", [2, 4])
+def test_overlap_map_depth_stage1_exception_propagates(depth):
+    def stage1(i):
+        if i == 5:
+            raise ValueError("feeder boom")
+        return i
+
+    with pytest.raises(ValueError, match="feeder boom"):
+        overlap_map(10, stage1, lambda i, s: s, pipelined=True, depth=depth)
+
+
+@pytest.mark.parametrize("depth", [2, 4])
+def test_overlap_map_depth_stage2_exception_stops_feeder(depth):
+    started = []
+    threads_before = threading.active_count()
+
+    def stage1(i):
+        started.append(i)
+        return i
+
+    def stage2(i, s):
+        if i == 3:
+            raise RuntimeError("consumer boom")
+        return s
+
+    with pytest.raises(RuntimeError, match="consumer boom"):
+        overlap_map(50, stage1, stage2, pipelined=True, depth=depth)
+    # the feeder was cancelled: it ran at most depth-ish items past the
+    # failure point, not all 50, and its thread exited (no leak)
+    assert max(started) <= 3 + depth + 2
+    deadline = time.time() + 5
+    while threading.active_count() > threads_before and time.time() < deadline:
+        time.sleep(0.01)
+    assert threading.active_count() <= threads_before
+
+
+def test_reconstruct_pipeline_depth_matches_serial():
+    x = gaussian_field((64, 64, 8), slope=-2.0, seed=4)
+    blobs = ChunkedRefactorPipeline(chunk_elems=1 << 13, pipelined=False,
+                                    levels=2).refactor(x, "v")
+    base = ChunkedReconstructPipeline(pipelined=False).reconstruct(blobs, 1e-4)
+    for depth in (1, 3):
+        p = ChunkedReconstructPipeline(pipelined=True, depth=depth)
+        assert np.array_equal(p.reconstruct(blobs, 1e-4), base)
+
+
+def test_retrieval_service_depth_plumbs_through(tmp_path):
+    from repro.store import DatasetStore, DatasetWriter, RetrievalService
+    x = gaussian_field((24, 24, 8), slope=-2.0, seed=6)
+    root = str(tmp_path / "store")
+    with DatasetWriter(root, chunk_elems=1 << 10) as w:
+        w.write("v", x)
+    svc = RetrievalService(DatasetStore.open(root), depth=4)
+    s = svc.open_session()
+    assert s.reader("v").depth == 4
+    xh, bound, _ = s.retrieve("v", 1e-4)
+    assert float(np.abs(xh - x).max()) <= bound <= 1e-4
 
 
 def test_serial_stage_times_sum_to_wall():
