@@ -8,9 +8,15 @@
   (ours)    store_serving (cold/warm cache, sessions, bytes-vs-tol; also
             writes out/benchmarks/store_serving.json)
 
-Usage: PYTHONPATH=src python -m benchmarks.run [--only MODULE] [--quick]
+Usage: PYTHONPATH=src python -m benchmarks.run [--only MODULE] [--devices N]
+
+``--devices N`` forwards a device count to every benchmark whose ``run``
+accepts a ``devices`` keyword (the mesh-sharded ones, e.g. weak_scaling),
+so the bench matrix covers 1 vs N host devices; benchmarks without the
+knob run unchanged.
 """
 import argparse
+import inspect
 import sys
 import traceback
 
@@ -31,6 +37,8 @@ MODULES = [
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--devices", type=int, default=None,
+                    help="device count forwarded to sharding-aware benchmarks")
     args = ap.parse_args()
     mods = [args.only] if args.only else MODULES
     print("name,us_per_call,derived")
@@ -38,7 +46,11 @@ def main() -> None:
     for name in mods:
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["run"])
-            for line in mod.run():
+            kw = {}
+            if (args.devices is not None
+                    and "devices" in inspect.signature(mod.run).parameters):
+                kw["devices"] = args.devices
+            for line in mod.run(**kw):
                 print(line)
             sys.stdout.flush()
         except Exception:  # noqa: BLE001

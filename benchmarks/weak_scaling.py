@@ -1,61 +1,118 @@
-"""Paper Fig 10: weak-scaling of refactoring across devices.
+"""Paper Fig 10: weak-scaling of the REAL sharded write path across devices.
 
-Each (host) device refactors its own shard — embarrassingly parallel, as in
-the paper's multi-GPU runs.  Runs subprocesses with 1/2/4/8 host devices and
-a fixed per-device workload; reports parallel efficiency vs 1 device.
-On 1 physical core the host devices timeshare, so the structural efficiency
-is what the assertion targets (the paper reports 89-95% on real GPUs).
+Each (host) device owns a round-robin shard of the chunks and runs the full
+fused refactor chain — decompose -> quantize -> bitplane encode -> lossless
+-> serialize — through ``ChunkedRefactorPipeline(mesh=...)``, exactly the
+path ``store.DatasetWriter`` drives (not just the raw bitplane kernel).
+Per-device workload is fixed (``CHUNKS_PER_DEV`` chunks of ``CHUNK_ELEMS``),
+so ideal weak scaling keeps wall time flat as devices grow.
+
+Host devices timeshare the container's few physical cores, so two numbers
+are reported per device count n:
+
+  ``weak_efficiency``     = t_1dev / t_n — the paper's weak-scaling metric
+                            (ideal 1.0, only reachable while n <= cores;
+                            the paper reports 89-95% on real GPUs);
+  ``serialized_speedup``  = n * t_1dev / t_n — speedup over running the n
+                            shards back-to-back (ideal min(n, cores)).
+                            This isolates the sharding layer's overhead
+                            (placement, per-device dispatch, scalar
+                            gathers), which is what can regress in CI.
+
+Writes ``out/benchmarks/weak_scaling.json`` with per-device-count
+throughput and efficiency (the CI bench artifact).  ``run(devices=N)``
+narrows the matrix to {1, N} (the ``benchmarks.run --devices`` knob).
 """
 from __future__ import annotations
 
+import json
 import os
 import subprocess
 import sys
 from pathlib import Path
+from typing import List, Optional
 
-from benchmarks.common import row
+from benchmarks.common import row, write_json
 
-_SCRIPT = r"""
-import time
-import numpy as np, jax, jax.numpy as jnp
-from repro.kernels import ref
+CHUNK_ELEMS = 1 << 16
+CHUNKS_PER_DEV = 4
+
+_SCRIPT = rf"""
+import json, time
+import numpy as np, jax
+from repro.core import pipeline as pl
+from repro.core import sharded as shd
+
 n_dev = len(jax.devices())
-per_dev = 1 << 20
-x = jnp.asarray(np.random.default_rng(0).integers(0, 2**23, (n_dev, per_dev)).astype(np.uint32))
-enc = jax.pmap(lambda m: ref.encode(m, 23, "register_block"))
-jax.block_until_ready(enc(x))
-t0 = time.perf_counter()
+chunk_elems = {CHUNK_ELEMS}
+n = n_dev * {CHUNKS_PER_DEV} * chunk_elems
+x = np.random.default_rng(0).standard_normal(n).astype(np.float32)
+mesh = shd.make_chunk_mesh(n_dev)
+
+def write():
+    pipe = pl.ChunkedRefactorPipeline(chunk_elems=chunk_elems, levels=2,
+                                      mesh=mesh)
+    pipe.refactor(x, name="v")
+    return pipe
+
+write()  # warm the jit caches (fused plan compile is amortized in practice)
+ts = []
 for _ in range(3):
-    jax.block_until_ready(enc(x))
-dt = (time.perf_counter() - t0) / 3
-print(f"RESULT {n_dev} {dt:.6f} {n_dev * per_dev * 4 / dt / 1e9:.4f}")
+    t0 = time.perf_counter()
+    pipe = write()
+    ts.append(time.perf_counter() - t0)
+dt = sorted(ts)[1]  # median of 3: single samples are too noisy on shared CI
+
+print("RESULT " + json.dumps({{
+    "devices": n_dev, "wall_s": dt, "chunks": pipe.stats.chunks,
+    "bytes_in": pipe.stats.bytes_in, "bytes_out": pipe.stats.bytes_out,
+    "gbps": pipe.stats.bytes_in / dt / 1e9}}))
 """
 
 
-def run() -> list:
-    lines = []
+def _one(n_dev: int, repo: Path) -> Optional[dict]:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
+    env["PYTHONPATH"] = str(repo / "src")
+    r = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=900)
+    out = [l for l in r.stdout.splitlines() if l.startswith("RESULT ")]
+    if r.returncode != 0 or not out:
+        sys.stderr.write(r.stderr[-2000:])
+        return None
+    return json.loads(out[0][len("RESULT "):])
+
+
+def run(devices: Optional[int] = None) -> List[str]:
+    counts = [1, 2, 4, 8] if devices is None else sorted({1, int(devices)})
     repo = Path(__file__).resolve().parents[1]
-    base = None
-    for n in [1, 2, 4, 8]:
-        env = dict(os.environ)
-        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
-        env["PYTHONPATH"] = str(repo / "src")
-        r = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
-                           capture_output=True, text=True, timeout=600)
-        out = [l for l in r.stdout.splitlines() if l.startswith("RESULT")]
-        if not out:
+    lines, results, base = [], [], None
+    for n in counts:
+        res = _one(n, repo)
+        if res is None:
             lines.append(row(f"weak_scaling_{n}dev", 0.0, "FAILED"))
             continue
-        _, nd, dt, gbps = out[0].split()
-        dt = float(dt)
+        if n == 1:
+            base = res["wall_s"]
+        # both ratios are only meaningful against the 1-device baseline: if
+        # that run FAILED, later rows report no_baseline instead of a bogus
+        # self-referential ratio
         if base is None:
-            base = dt
-        # this container has ONE physical core timesharing the host devices:
-        # the structural (parallel-overhead) efficiency compares against the
-        # core-serialized ideal n*base, not the real-hardware ideal (=base).
-        eff = n * base / dt
-        lines.append(row(f"weak_scaling_{n}dev", dt,
-                         f"{gbps}GBps;core_serialized_efficiency={eff:.2f}"))
+            res["weak_efficiency"] = res["serialized_speedup"] = None
+            derived = f"{res['gbps']:.4f}GBps;no_baseline"
+        else:
+            res["weak_efficiency"] = base / res["wall_s"]
+            res["serialized_speedup"] = n * base / res["wall_s"]
+            derived = (f"{res['gbps']:.4f}GBps;"
+                       f"weak_efficiency={res['weak_efficiency']:.2f};"
+                       f"serialized_speedup={res['serialized_speedup']:.2f}")
+        results.append(res)
+        lines.append(row(f"weak_scaling_{n}dev", res["wall_s"], derived))
+    write_json("weak_scaling", {
+        "bench": "weak_scaling", "path": "ChunkedRefactorPipeline(mesh=...)",
+        "chunk_elems": CHUNK_ELEMS, "chunks_per_device": CHUNKS_PER_DEV,
+        "host_cores": os.cpu_count(),
+        "results": results})
     return lines
 
 

@@ -51,6 +51,7 @@ from repro.core import lossless as ll
 from repro.core import refactor as rf
 from repro.core import refactor_fused as rff
 from repro.core import retrieve as rtv
+from repro.core import sharded as shd
 
 
 @dataclasses.dataclass
@@ -171,6 +172,13 @@ class ChunkedRefactorPipeline:
     ``None``: enabled in serial mode (the stage-sum contract of
     tests/test_pipeline_stats.py), disabled in pipelined mode — the overlap
     path must not pay a per-chunk ``block_until_ready``.
+
+    ``mesh`` shards the write across devices (``core.sharded``): chunks are
+    placed round-robin on the mesh's chunk-axis devices and each chunk's
+    fused dispatch runs on its owning device, so dispatch-ahead becomes
+    dispatch-per-*device*-ahead — up to ``dispatch_ahead`` chunks in flight
+    on EACH device.  ``mesh=None`` (default) is exactly today's
+    single-device path; a mesh of one device is byte-identical to it.
     """
 
     def __init__(self, chunk_elems: int = 1 << 20, pipelined: bool = True,
@@ -180,7 +188,8 @@ class ChunkedRefactorPipeline:
                  mag_bits: Optional[int] = None,
                  sink: Optional[Callable[[int, rf.Refactored], bytes]] = None,
                  fused: bool = True, dispatch_ahead: int = 2,
-                 stage_timing: Optional[bool] = None):
+                 stage_timing: Optional[bool] = None,
+                 mesh: shd.MeshLike = None):
         self.chunk_elems = chunk_elems
         self.pipelined = pipelined
         self.levels = levels
@@ -196,12 +205,26 @@ class ChunkedRefactorPipeline:
         self.dispatch_ahead = max(int(dispatch_ahead), 1)
         self.stage_timing = (not pipelined) if stage_timing is None \
             else bool(stage_timing)
+        # chunk -> device placement (and the fused dispatch route when a
+        # mesh is set); mesh=None keeps placement uncommitted (default device)
+        self.sharded = shd.ShardedRefactorPlan(
+            mesh, levels=levels, design=design, mag_bits=mag_bits,
+            hybrid=hybrid, backend=backend)
+        self.mesh = self.sharded.mesh
         self.stats = PipelineStats()
 
+    @property
+    def n_shards(self) -> int:
+        return self.sharded.n_shards
+
+    def chunk_shards(self, n_chunks: int) -> List[int]:
+        """Round-robin chunk -> shard ordinals (recorded in store manifests)."""
+        return [self.sharded.shard_for(ci) for ci in range(n_chunks)]
+
     # -- stages ------------------------------------------------------------
-    def _copy_in(self, host_chunk: np.ndarray) -> jax.Array:
+    def _copy_in(self, host_chunk: np.ndarray, ci: int) -> jax.Array:
         t0 = time.perf_counter()
-        dev = jax.device_put(host_chunk)
+        dev = self.sharded.place(ci, host_chunk)
         if self.stage_timing:
             # barrier so copy_in_s measures the transfer, not its dispatch;
             # skipped on the overlap path (no per-chunk sync)
@@ -209,17 +232,17 @@ class ChunkedRefactorPipeline:
         self.stats.copy_in_s += time.perf_counter() - t0
         return dev
 
-    def _dispatch(self, dev_chunk: jax.Array, name: str):
+    def _dispatch(self, dev_chunk: jax.Array, name: str, ci: int):
         """Launch one chunk's encode.  Fused mode: ONE jitted dispatch, no
         sync — returns a ``refactor_fused.PendingChunk`` whose device work
-        overlaps later host stages.  Non-fused: the full per-piece compute
-        (returns the finished ``Refactored``)."""
+        overlaps later host stages (on the chunk's owning device when a
+        mesh is set).  Non-fused: the full per-piece compute (returns the
+        finished ``Refactored``); the committed input keeps the compute on
+        the owning device there too."""
         t0 = time.perf_counter()
         kw = {} if self.mag_bits is None else {"mag_bits": self.mag_bits}
         if self.fused:
-            out = rff.dispatch_encode(dev_chunk, name=name, levels=self.levels,
-                                      design=self.design, hybrid=self.hybrid,
-                                      backend=self.backend, **kw)
+            out = self.sharded.dispatch(ci, dev_chunk, name=name)
         else:
             out = rf.refactor_array(dev_chunk, name=name, levels=self.levels,
                                     design=self.design, hybrid=self.hybrid,
@@ -237,8 +260,21 @@ class ChunkedRefactorPipeline:
         self.stats.compute_s += time.perf_counter() - t0
         return out
 
-    def _compute(self, dev_chunk: jax.Array, name: str) -> rf.Refactored:
-        return self._finish(self._dispatch(dev_chunk, name))
+    def _finish_round(self, pendings: List[rff.PendingChunk]
+                      ) -> List[rf.Refactored]:
+        """Resolve a round of dispatched chunks: ONE host sync gathers the
+        whole round's scalar metadata across devices (``sharded.
+        finish_round``) instead of one sync per chunk — for a mesh of one
+        the round is one chunk, so the per-chunk sync budget is unchanged."""
+        t0 = time.perf_counter()
+        outs = self.sharded.finish_round(pendings)
+        if self.stage_timing:
+            outs = [_block_stage(o) for o in outs]
+        self.stats.compute_s += time.perf_counter() - t0
+        return outs
+
+    def _compute(self, dev_chunk: jax.Array, name: str, ci: int) -> rf.Refactored:
+        return self._finish(self._dispatch(dev_chunk, name, ci))
 
     def _copy_out(self, ci: int, refd: rf.Refactored) -> bytes:
         t0 = time.perf_counter()
@@ -248,6 +284,16 @@ class ChunkedRefactorPipeline:
             blob = rf.refactored_to_bytes(refd)
         self.stats.copy_out_s += time.perf_counter() - t0
         return blob
+
+    def _drain_round(self, inflight, out_q) -> None:
+        """Pop up to one round (``n_shards`` chunks, FIFO) off the in-flight
+        window, finish it with one cross-device scalar gather, and hand the
+        results to the serializer in chunk order."""
+        batch = [inflight.popleft()
+                 for _ in range(min(self.n_shards, len(inflight)))]
+        for (cj, _), refd in zip(batch,
+                                 self._finish_round([p for _, p in batch])):
+            out_q.put((cj, refd))
 
     # -- driver --------------------------------------------------------------
     def refactor(self, x: np.ndarray, name: str = "var") -> List[bytes]:
@@ -259,12 +305,15 @@ class ChunkedRefactorPipeline:
 
         if not self.pipelined:
             for ci, sl in enumerate(slices):
-                dev = self._copy_in(flat[sl])
-                refd = self._compute(dev, f"{name}.{ci}")
+                dev = self._copy_in(flat[sl], ci)
+                refd = self._compute(dev, f"{name}.{ci}", ci)
                 blobs[ci] = self._copy_out(ci, refd)
         else:
             # Q1: prefetch (H2D), Q3: serialize (D2H); compute on main thread.
-            prefetch_q: "queue.Queue[tuple[int, jax.Array]]" = queue.Queue(maxsize=2)
+            # The prefetch queue holds at least one placed chunk per shard so
+            # a mesh's devices never starve waiting on the H2D stage.
+            prefetch_q: "queue.Queue[tuple[int, jax.Array]]" = queue.Queue(
+                maxsize=max(2, self.n_shards))
             out_q: "queue.Queue[tuple[int, rf.Refactored]]" = queue.Queue(maxsize=2)
             done = threading.Event()
             errors: List[BaseException] = []  # worker exceptions, re-raised
@@ -272,7 +321,7 @@ class ChunkedRefactorPipeline:
             def prefetcher():
                 try:
                     for ci, sl in enumerate(slices):
-                        prefetch_q.put((ci, self._copy_in(flat[sl])))  # S -> I edge
+                        prefetch_q.put((ci, self._copy_in(flat[sl], ci)))  # S -> I
                 except BaseException as exc:  # noqa: BLE001 - to caller
                     errors.append(exc)
                 prefetch_q.put((-1, None))
@@ -298,6 +347,11 @@ class ChunkedRefactorPipeline:
             # dispatch-ahead window: chunk k+1's fused encode is dispatched
             # (in flight on device) before chunk k's finish (host lossless
             # selection + pack) runs — up to ``dispatch_ahead`` chunks deep.
+            # With a mesh the window is per DEVICE: consecutive chunks land
+            # on different devices (round-robin), so ``dispatch_ahead``
+            # chunks in flight per device means dispatch_ahead * n_shards
+            # in the window before the oldest chunk must finish.
+            window = self.dispatch_ahead * self.n_shards
             inflight: "collections.deque[tuple]" = collections.deque()
             try:
                 while True:
@@ -306,19 +360,17 @@ class ChunkedRefactorPipeline:
                         break
                     if errors:
                         continue  # drain the prefetcher; skip further compute
-                    pend = self._dispatch(dev, f"{name}.{ci}")
+                    pend = self._dispatch(dev, f"{name}.{ci}", ci)
                     if isinstance(pend, rf.Refactored):
                         # non-fused: _dispatch already completed the chunk;
                         # buffering it would only delay the serializer
                         out_q.put((ci, pend))
                         continue
                     inflight.append((ci, pend))
-                    while len(inflight) >= self.dispatch_ahead:
-                        cj, pend = inflight.popleft()
-                        out_q.put((cj, self._finish(pend)))  # O overlaps next
+                    while len(inflight) >= window:
+                        self._drain_round(inflight, out_q)  # O overlaps next
                 while inflight and not errors:
-                    cj, pend = inflight.popleft()
-                    out_q.put((cj, self._finish(pend)))
+                    self._drain_round(inflight, out_q)
             except BaseException as exc:  # noqa: BLE001 - compute failed
                 errors.append(exc)
                 while ci >= 0:  # release the prefetcher parked on its put
@@ -346,14 +398,23 @@ class ChunkedReconstructPipeline:
 
     ``depth`` is the overlap feeder's look-ahead (``overlap_map`` depth):
     how many chunks may sit deserialized+fetched ahead of the compute
-    stage.  Order and exception propagation are preserved at any depth."""
+    stage.  Order and exception propagation are preserved at any depth.
+
+    ``mesh`` shards reconstruction across devices (``core.sharded``): each
+    chunk's incremental engine state lives on the chunk's round-robin
+    owning device, decode kernels run there, and only the final host
+    concatenation joins the shards.  ``mesh=None`` is today's single-device
+    path (bit-identical; so is a mesh of one device)."""
 
     def __init__(self, pipelined: bool = True, backend: str = "auto",
-                 incremental: bool = True, depth: int = 2):
+                 incremental: bool = True, depth: int = 2,
+                 mesh: shd.MeshLike = None):
         self.pipelined = pipelined
         self.backend = backend
         self.incremental = incremental
         self.depth = max(int(depth), 1)
+        self.sharded = shd.ShardedReconstructEngine(mesh)
+        self.mesh = self.sharded.mesh
         self.stats = PipelineStats()
 
     def reconstruct(self, blobs: Sequence[bytes], tol: float) -> np.ndarray:
@@ -369,7 +430,8 @@ class ChunkedReconstructPipeline:
             t0 = time.perf_counter()
             reader = rtv.ProgressiveReader(rf.refactored_from_bytes(blobs[ci]),
                                            backend=self.backend,
-                                           incremental=self.incremental)
+                                           incremental=self.incremental,
+                                           device=self.sharded.device_for(ci))
             self.stats.copy_in_s += time.perf_counter() - t0
             return reader
 

@@ -119,9 +119,15 @@ class IncrementalReconstructor:
     drained by ``batch_apply_pending`` to share kernel launches across many
     engines (the store service's cross-session batch)."""
 
-    def __init__(self, ref: Refactored, backend: str = "auto"):
+    def __init__(self, ref: Refactored, backend: str = "auto",
+                 device: Optional[jax.Device] = None):
         self.ref = ref
         self.backend = backend
+        # owning device of this engine's state (mesh-sharded read path:
+        # core.sharded places each chunk's engine on the chunk's device).
+        # None = today's single-device path: uncommitted default-device
+        # arrays, bit-identical placement-free behavior.
+        self.device = device
         # delta plane bytes decoded into THIS engine — per-instance so
         # callers (the QoI loop's per-iteration accounting) stay correct
         # under concurrent sessions; STATS is the process-global aggregate
@@ -139,11 +145,19 @@ class IncrementalReconstructor:
         self._levels: Optional[List[jax.Array]] = None
 
     # ------------------------------------------------------------- staging --
+    def _upload(self, rows) -> jax.Array:
+        """Host rows -> this engine's device (uncommitted when device=None)."""
+        if self.device is None:
+            return jnp.asarray(rows, jnp.uint32)
+        if isinstance(rows, jax.Array):
+            return jax.device_put(rows.astype(jnp.uint32), self.device)
+        return jax.device_put(np.asarray(rows, np.uint32), self.device)
+
     def stage_sign(self, piece: int, rows) -> None:
         """(1, W) uint32 sign plane of a piece's first fetch."""
         if self.ref.pieces[piece].n == 0:
             return
-        self._pending_sign.append((piece, jnp.asarray(rows, jnp.uint32)))
+        self._pending_sign.append((piece, self._upload(rows)))
 
     def stage_rows(self, piece: int, rows, row_offset: int) -> None:
         """(P', W) uint32 plane rows sitting ``row_offset`` rows into the
@@ -151,7 +165,7 @@ class IncrementalReconstructor:
         if self.ref.pieces[piece].n == 0 or rows.shape[0] == 0:
             return
         self._pending.append(_PendingRows(
-            piece, jnp.asarray(rows, jnp.uint32), row_offset))
+            piece, self._upload(rows), row_offset))
         STATS.add(groups_staged=1)
 
     def _take_pending(self) -> List[_PendingRows]:
@@ -178,6 +192,8 @@ class IncrementalReconstructor:
         v = self._value[pi]
         if v is None:
             v = jnp.zeros((self.ref.pieces[pi].n,), jnp.float32)
+            if self.device is not None:
+                v = jax.device_put(v, self.device)
             self._value[pi] = v
         return v
 
@@ -238,12 +254,15 @@ def batch_apply_pending(engines: Sequence[IncrementalReconstructor]) -> None:
 
     def key(job):
         e, p = job
+        # the engine's owning device is part of the bucket: sharded engines
+        # (core.sharded) never mix devices in one stacked decode, so each
+        # kernel launch runs where its engine state lives
         return (int(p.rows.shape[0]), int(p.rows.shape[1]), p.row_offset,
                 e.ref.pieces[p.piece].n, e.ref.mag_bits, e.ref.design,
-                e.backend)
+                e.backend, e.device)
 
     for k, pos in lb.batch_jobs(jobs, key).items():
-        n_rows, _, offset, n, mag_bits, design, backend = k
+        n_rows, _, offset, n, mag_bits, design, backend, _dev = k
         batch = [jobs[p] for p in pos]
         stacked = jnp.stack([p.rows for _, p in batch])
         mags = kops.decode_bitplanes_offset_batch(
@@ -258,10 +277,10 @@ def batch_apply_pending(engines: Sequence[IncrementalReconstructor]) -> None:
     def sign_key(job):
         e, pi, rows = job
         return (int(rows.shape[1]), e.ref.pieces[pi].n, e.ref.design,
-                e.backend)
+                e.backend, e.device)
 
     for k, pos in lb.batch_jobs(sign_jobs, sign_key).items():
-        _, n, design, backend = k
+        _, n, design, backend, _dev = k
         batch = [sign_jobs[p] for p in pos]
         stacked = jnp.stack([rows for _, _, rows in batch])
         sgs = kops.decode_bitplanes_batch(stacked, 1, n, design,

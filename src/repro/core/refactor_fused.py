@@ -258,12 +258,18 @@ def dispatch_encode(x, name: str = "var",
                         amax=amax, rng=rng, stacks=tuple(rest))
 
 
-def finish_encode(p: PendingChunk) -> rf.Refactored:
+def finish_encode(p: PendingChunk, _scalars=None) -> rf.Refactored:
     """Resolve a dispatched chunk: ONE scalar sync, then the stacked
-    lossless engine (two syncs), then host-side manifest assembly."""
+    lossless engine (two syncs), then host-side manifest assembly.
+
+    ``_scalars`` lets a caller that already gathered the chunk's
+    (exps, amax, rng) host values — the sharded round finisher syncs a whole
+    round of chunks across devices in one ``host_sync`` — skip the per-chunk
+    sync; values must be exactly ``host_sync((p.exps, p.amax, p.rng))``."""
     STATS.add(finishes=1)
     plan = p.plan
-    scalars = lb.host_sync((p.exps, p.amax, p.rng))
+    scalars = (lb.host_sync((p.exps, p.amax, p.rng))
+               if _scalars is None else _scalars)
     exps = [int(e) for e in scalars[0]]
     amax = float(scalars[1]) if p.amax is not None else 0.0
     rng = float(scalars[2]) if p.rng is not None else 0.0

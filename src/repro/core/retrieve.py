@@ -89,14 +89,19 @@ class ProgressiveReader:
 
     def __init__(self, ref: Refactored, backend: str = "auto",
                  source: Optional[SegmentSource] = None,
-                 incremental: bool = True):
+                 incremental: bool = True,
+                 device: Optional[jax.Device] = None):
         self.ref = ref
         self.backend = backend
         self.source = source if source is not None else InlineSegmentSource(ref)
         self.state = [_PieceState() for _ in ref.pieces]
         self.total_bytes_fetched = 0
         self.incremental = incremental
-        self.engine = (rc.IncrementalReconstructor(ref, backend=backend)
+        # mesh-sharded read path: pin the engine's state to the chunk's
+        # owning device (core.sharded); None = uncommitted (today's path)
+        self.device = device
+        self.engine = (rc.IncrementalReconstructor(ref, backend=backend,
+                                                   device=device)
                        if incremental else None)
 
     # ----------------------------------------------------------- planning --

@@ -88,6 +88,59 @@ def decode_bitplanes_batch(planes: jax.Array, num_planes_total: int, n: int,
         p, num_planes_total, n, design, backend, tiles_per_block, unroll))(planes)
 
 
+def _shard_batch(fn, batch: jax.Array, mesh, axis: str):
+    """Run a batched bitplane op under a mesh axis via ``shard_map``.
+
+    ``batch``'s leading dimension is split across ``mesh``'s ``axis``; each
+    device traces the same jitted batch op over its rows (collective-free,
+    so results are bitwise placement-independent).  The thin wrapper is what
+    lets the encode/decode batch ops trace under a mesh axis: their
+    ``static_argnames`` jits can't be handed to ``shard_map`` directly with
+    per-call statics bound."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed import sharding as shd  # local: keep graph flat
+
+    size = mesh.shape[axis]
+    if int(batch.shape[0]) % size != 0:
+        raise ValueError(
+            f"batch dim {batch.shape[0]} not divisible by mesh axis "
+            f"{axis!r} of size {size}")
+    return shd.shard_map(fn, mesh=mesh, in_specs=P(axis),
+                         out_specs=P(axis), check_vma=False)(batch)
+
+
+def encode_bitplanes_sharded(mags: jax.Array, num_planes: int,
+                             design: str = "register_block",
+                             backend: str = _DEFAULT_BACKEND,
+                             tiles_per_block: int = 8,
+                             unroll: str = "butterfly", *,
+                             mesh, axis: str = "chunk") -> jax.Array:
+    """``encode_bitplanes_batch`` sharded over a mesh axis: (B, N) rows
+    split across the axis's devices, each encoding its shard in place with
+    no collectives.  B must divide by the axis size.  Bit-identical to the
+    unsharded batch op (tests/test_sharded.py)."""
+    return _shard_batch(
+        lambda m: encode_bitplanes_batch(m, num_planes, design, backend,
+                                         tiles_per_block, unroll),
+        mags, mesh, axis)
+
+
+def decode_bitplanes_sharded(planes: jax.Array, num_planes_total: int, n: int,
+                             design: str = "register_block",
+                             backend: str = _DEFAULT_BACKEND,
+                             tiles_per_block: int = 8,
+                             unroll: str = "butterfly", *,
+                             mesh, axis: str = "chunk") -> jax.Array:
+    """``decode_bitplanes_batch`` sharded over a mesh axis: (B, P, W) plane
+    prefixes split across the axis's devices, decoded shard-local with no
+    collectives.  B must divide by the axis size."""
+    return _shard_batch(
+        lambda p: decode_bitplanes_batch(p, num_planes_total, n, design,
+                                         backend, tiles_per_block, unroll),
+        planes, mesh, axis)
+
+
 def decode_bitplanes_offset(planes: jax.Array, num_planes_total: int, n: int,
                             plane_offset: int,
                             design: str = "register_block",

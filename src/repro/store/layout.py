@@ -113,6 +113,12 @@ class VariableEntry:
     amax: float                  # global max |x| over the variable
     range: float                 # global max(x) - min(x)
     chunks: List[ChunkEntry]
+    # chunk -> shard ordinal of the mesh the variable was written on
+    # (core.sharded round-robin).  Purely a placement HINT for readers —
+    # payload bytes are placement-independent (single-device-oracle
+    # guarantee), and absent (None) means single-device.  Readers take it
+    # modulo their own mesh size, so N-device stores read fine on M devices.
+    shards: Optional[List[int]] = None
 
     @property
     def n_elements(self) -> int:
@@ -126,16 +132,20 @@ class VariableEntry:
         return sum(c.stored_bytes for c in self.chunks)
 
     def to_json(self) -> Dict:
-        return {"name": self.name, "shape": list(self.shape),
-                "levels": self.levels, "design": self.design,
-                "mag_bits": self.mag_bits, "group_size": self.group_size,
-                "chunk_elems": self.chunk_elems,
-                "segment_file": self.segment_file,
-                "amax": self.amax, "range": self.range,
-                "chunks": [c.to_json() for c in self.chunks]}
+        out = {"name": self.name, "shape": list(self.shape),
+               "levels": self.levels, "design": self.design,
+               "mag_bits": self.mag_bits, "group_size": self.group_size,
+               "chunk_elems": self.chunk_elems,
+               "segment_file": self.segment_file,
+               "amax": self.amax, "range": self.range,
+               "chunks": [c.to_json() for c in self.chunks]}
+        if self.shards is not None:
+            out["shards"] = list(self.shards)
+        return out
 
     @staticmethod
     def from_json(j: Dict) -> "VariableEntry":
+        shards = j.get("shards")
         return VariableEntry(
             name=str(j["name"]), shape=tuple(int(s) for s in j["shape"]),
             levels=int(j["levels"]), design=str(j["design"]),
@@ -143,7 +153,8 @@ class VariableEntry:
             chunk_elems=int(j["chunk_elems"]),
             segment_file=str(j["segment_file"]),
             amax=float(j["amax"]), range=float(j["range"]),
-            chunks=[ChunkEntry.from_json(c) for c in j["chunks"]])
+            chunks=[ChunkEntry.from_json(c) for c in j["chunks"]],
+            shards=None if shards is None else [int(s) for s in shards])
 
 
 @dataclasses.dataclass

@@ -36,7 +36,7 @@ import numpy as np
 
 from repro.core import pipeline as pl
 from repro.core import qoi as qq
-from repro.core import reconstruct as rc
+from repro.core import sharded as shd
 from repro.core.retrieve import ProgressiveReader, SegmentSource
 from repro.store import layout as lo
 
@@ -90,12 +90,15 @@ def reconstruct_many(readers: Sequence[ProgressiveReader],
     same-shaped (rows, words, n, offset) bucket — across pieces, chunks,
     variables, and sessions — through ONE vmapped
     ``kernels.ops.decode_bitplanes_offset_batch`` call (grouping shared with
-    the codec engine via ``lossless_batch.batch_jobs``).  Unlike the old
+    the codec engine via ``lossless_batch.batch_jobs``).  Mesh-sharded
+    readers drain per device (``core.sharded``): buckets never mix devices,
+    each launch runs where its engine state lives.  Unlike the old
     cross-session *full* decode, already-decoded state is never re-run:
     clean engines serve their cached reconstruction.  Returns
     [(device array, bound)] aligned with ``readers``; oracle
     (``incremental=False``) readers fall back to their own full decode."""
-    rc.batch_apply_pending([r.engine for r in readers if r.incremental])
+    shd.ShardedReconstructEngine.drain(
+        [r.engine for r in readers if r.incremental])
     return [r.reconstruct_device() for r in readers]
 
 
@@ -125,17 +128,22 @@ class StoreVariableReader:
     # debugging against the engine, not for serving.
     def __init__(self, store: lo.DatasetStore, name: str,
                  backend: str = "auto", incremental: bool = True,
-                 depth: int = 2):
+                 depth: int = 2, mesh: shd.MeshLike = None):
         var = store.variable(name)
         self.var = var
         self.name = name
         self.backend = backend
         self.incremental = incremental
         self.depth = max(int(depth), 1)  # overlap feeder look-ahead
+        # chunk -> device placement: the manifest's recorded shard map (if
+        # the variable was written sharded) taken modulo this mesh's size,
+        # else round-robin; mesh=None keeps every engine uncommitted
+        self.sharded = shd.ShardedReconstructEngine(mesh, shards=var.shards)
         self.chunk_readers = [
             ProgressiveReader(lo.chunk_refactored(var, ci), backend=backend,
                               source=StoreSegmentSource(store, name, ci),
-                              incremental=incremental)
+                              incremental=incremental,
+                              device=self.sharded.device_for(ci))
             for ci in range(len(var.chunks))]
         self.ref = _VarRef(var, self.chunk_readers)
         # assembled-variable cache, keyed on the fetch signature; per-chunk
@@ -190,7 +198,14 @@ class StoreVariableReader:
                   ) -> Tuple[jax.Array, float]:
         if not outs:
             return jnp.zeros(self.var.shape, jnp.float32), 0.0
-        flat = jnp.concatenate([o[0].reshape(-1) for o in outs])
+        parts = [o[0].reshape(-1) for o in outs]
+        if self.sharded.mesh is not None and len(parts) > 1:
+            # shards live on their owning devices; jnp.concatenate requires
+            # colocated operands, so gather to the mesh's first device (the
+            # read side's D2H-equivalent join — values are bit-unchanged)
+            d0 = self.sharded.devices[0]
+            parts = [jax.device_put(p, d0) for p in parts]
+        flat = jnp.concatenate(parts)
         return flat.reshape(self.var.shape), max(o[1] for o in outs)
 
     # The assembled variable is cached on the fetch signature; chunk-level
@@ -277,7 +292,8 @@ class Session:
             r = StoreVariableReader(self.service.store, var,
                                     self.service.backend,
                                     incremental=self.service.incremental,
-                                    depth=self.service.depth)
+                                    depth=self.service.depth,
+                                    mesh=self.service.mesh)
             self._readers[var] = r
         return r
 
@@ -312,11 +328,15 @@ class RetrievalService:
     """Multiplexes concurrent progressive-retrieval sessions over one store."""
 
     def __init__(self, store: lo.DatasetStore, backend: str = "auto",
-                 incremental: bool = True, depth: int = 2):
+                 incremental: bool = True, depth: int = 2,
+                 mesh: shd.MeshLike = None):
         self.store = store
         self.backend = backend
         self.incremental = incremental
         self.depth = max(int(depth), 1)  # overlap feeder look-ahead
+        # mesh-sharded serving: every session's variable readers place their
+        # chunk engines across this mesh's devices (core.sharded)
+        self.mesh = shd.resolve_mesh(mesh)
         self._sessions: Dict[int, Session] = {}
         self._ids = itertools.count(1)
         self._lock = threading.Lock()
@@ -373,10 +393,10 @@ class RetrievalService:
                 plan_map[id(r)] = (r, target)
         _warm_and_fetch(list(plan_map.values()), depth=self.depth)
         # one cross-session batched delta decode over every distinct reader's
-        # staged plane groups
-        rc.batch_apply_pending([cr.engine for ent in uniq.values()
-                                for cr in ent["vr"].chunk_readers
-                                if cr.incremental])
+        # staged plane groups (per mesh device when serving sharded)
+        shd.ShardedReconstructEngine.drain(
+            [cr.engine for ent in uniq.values()
+             for cr in ent["vr"].chunk_readers if cr.incremental])
         results = []
         for ent, first in req_entries:
             vr = ent["vr"]

@@ -22,6 +22,7 @@ from repro.core import decompose as dc
 from repro.core import lossless as ll
 from repro.core import pipeline as pl
 from repro.core import refactor as rf
+from repro.core import sharded as shd
 from repro.store import layout as lo
 
 
@@ -63,7 +64,8 @@ class DatasetWriter:
                  mag_bits: Optional[int] = None,
                  hybrid: ll.HybridConfig = ll.HybridConfig(),
                  pipelined: bool = True, backend: str = "auto",
-                 fused: bool = True, dispatch_ahead: int = 2):
+                 fused: bool = True, dispatch_ahead: int = 2,
+                 mesh: shd.MeshLike = None):
         self.root = root
         self.chunk_elems = int(chunk_elems)
         self.levels = levels
@@ -76,6 +78,11 @@ class DatasetWriter:
         # core.refactor_fused / ChunkedRefactorPipeline dispatch-ahead)
         self.fused = fused
         self.dispatch_ahead = dispatch_ahead
+        # mesh-sharded write (core.sharded): chunks round-robin across the
+        # mesh's devices; the chunk -> shard map is recorded per variable in
+        # the manifest.  Payload bytes are placement-independent (the
+        # single-device-oracle guarantee, docs/distributed.md).
+        self.mesh = shd.resolve_mesh(mesh)
         self._finalized = False
         self._written: set = set()
         os.makedirs(root, exist_ok=True)
@@ -92,12 +99,14 @@ class DatasetWriter:
     def write(self, name: str, x: np.ndarray) -> lo.VariableEntry:
         if self._finalized:
             raise RuntimeError("writer already finalized")
+        if not name or "/" in name or name.startswith("."):
+            raise ValueError(f"invalid variable name {name!r}")
+        # duplicate names within one writer session are an error (a second
+        # write would silently replace the first's manifest entry and orphan
+        # its segments); a name only present in the COMMITTED manifest is a
+        # REWRITE — the new generation replaces it when finalize() commits
         if name in self._written:
             raise ValueError(f"variable {name!r} already written")
-        # a name only present in the committed manifest is a REWRITE: the new
-        # generation replaces it when finalize() commits
-        if "/" in name or name.startswith("."):
-            raise ValueError(f"invalid variable name {name!r}")
         x = np.asarray(x, dtype=np.float32)
         shape = tuple(int(s) for s in x.shape)
         # NB: ascontiguousarray promotes 0-d to 1-d, hence shape captured first
@@ -121,7 +130,8 @@ class DatasetWriter:
             chunk_elems=self.chunk_elems, pipelined=self.pipelined,
             levels=levels, design=self.design, hybrid=self.hybrid,
             backend=self.backend, mag_bits=self.mag_bits, sink=sink,
-            fused=self.fused, dispatch_ahead=self.dispatch_ahead)
+            fused=self.fused, dispatch_ahead=self.dispatch_ahead,
+            mesh=self.mesh)
         try:
             pipe.refactor(flat, name=name)
         finally:
@@ -136,7 +146,9 @@ class DatasetWriter:
             segment_file=seg_key,
             amax=float(np.abs(x).max()) if x.size else 0.0,
             range=float(x.max() - x.min()) if x.size else 0.0,
-            chunks=chunks)
+            chunks=chunks,
+            shards=(pipe.chunk_shards(len(chunks))
+                    if self.mesh is not None else None))
         self.manifest.variables[name] = entry
         self._written.add(name)
         return entry
