@@ -1,0 +1,118 @@
+"""CI perf-regression gate over benchmark JSON artifacts.
+
+Each committed baseline (``benchmarks/baselines/<name>.json``) names one
+artifact in ``out/benchmarks/`` and a list of budgets — dotted paths into
+the artifact's JSON with a comparison op and a bound::
+
+    {
+      "artifact": "pipeline_overlap.json",
+      "budgets": [
+        {"path": "syncs_per_chunk", "op": "<=", "value": 4.0,
+         "note": "3/chunk fused write + 1/chunk read"},
+        {"path": "pipelined.codec.host_syncs", "op": "<=", "value": 21}
+      ]
+    }
+
+Usage (the CI bench job)::
+
+    PYTHONPATH=src python -m benchmarks.run           # writes out/benchmarks/
+    PYTHONPATH=src python -m benchmarks.check_regressions
+
+Exit status is non-zero when ANY budget is violated, an artifact is missing,
+or a budget path does not resolve — a silently-skipped budget must fail the
+gate, not pass it.  ``--baselines``/``--artifacts`` override the default
+directories (used by the self-test in tests/test_obs.py, which doctors a
+snapshot and asserts the gate trips).
+
+Budget values are *bounds with slack* around measured reality, not
+aspirations: a budget documents the regression frontier CI holds, while
+targets (e.g. compression ratio >= 1.0, overlap speedup >= 1.0) are tracked
+in ROADMAP.md.  Tighten a budget in the same PR that improves the metric.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Any, List, Tuple
+
+REPO = Path(__file__).resolve().parents[1]
+BASELINES = REPO / "benchmarks" / "baselines"
+ARTIFACTS = REPO / "out" / "benchmarks"
+
+OPS = {
+    "<=": lambda a, b: a <= b,
+    ">=": lambda a, b: a >= b,
+    "<": lambda a, b: a < b,
+    ">": lambda a, b: a > b,
+    "==": lambda a, b: a == b,
+}
+
+
+def resolve(obj: Any, path: str) -> Any:
+    """Walk a dotted path through dicts and lists (int segments index)."""
+    cur = obj
+    for seg in path.split("."):
+        if isinstance(cur, list):
+            cur = cur[int(seg)]
+        elif isinstance(cur, dict):
+            if seg not in cur:
+                raise KeyError(path)
+            cur = cur[seg]
+        else:
+            raise KeyError(path)
+    return cur
+
+
+def check_baseline(baseline_path: Path, artifacts_dir: Path
+                   ) -> List[Tuple[bool, str]]:
+    """Returns (ok, message) per budget; a missing artifact is one failure."""
+    spec = json.loads(baseline_path.read_text())
+    artifact = artifacts_dir / spec["artifact"]
+    if not artifact.exists():
+        return [(False, f"{spec['artifact']}: artifact missing "
+                        f"(did the bench run?)")]
+    data = json.loads(artifact.read_text())
+    out: List[Tuple[bool, str]] = []
+    for b in spec["budgets"]:
+        path, op, bound = b["path"], b["op"], b["value"]
+        tag = f"{spec['artifact']}:{path} {op} {bound}"
+        try:
+            got = resolve(data, path)
+        except (KeyError, IndexError, ValueError, TypeError):
+            out.append((False, f"{tag} — path not found in artifact"))
+            continue
+        if got is None or not OPS[op](got, bound):
+            note = f" ({b['note']})" if b.get("note") else ""
+            out.append((False, f"{tag} — got {got!r}{note}"))
+        else:
+            out.append((True, f"{tag} — got {got!r}"))
+    return out
+
+
+def main(argv: List[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baselines", type=Path, default=BASELINES)
+    ap.add_argument("--artifacts", type=Path, default=ARTIFACTS)
+    args = ap.parse_args(argv)
+    specs = sorted(args.baselines.glob("*.json"))
+    if not specs:
+        print(f"check_regressions: no baselines under {args.baselines}",
+              file=sys.stderr)
+        return 1
+    failures = 0
+    for spec in specs:
+        for ok, msg in check_baseline(spec, args.artifacts):
+            print(("PASS  " if ok else "FAIL  ") + msg)
+            failures += 0 if ok else 1
+    if failures:
+        print(f"check_regressions: {failures} budget(s) violated",
+              file=sys.stderr)
+        return 1
+    print("check_regressions: all budgets hold")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

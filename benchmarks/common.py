@@ -1,10 +1,24 @@
-"""Shared benchmark utilities: timing, CSV rows, JSON artifacts."""
+"""Shared benchmark utilities: timing, CSV rows, JSON artifacts.
+
+``write_json`` is the single exit door for benchmark results: when an
+``obs`` tracing context and/or metrics scope is active (``run.py`` installs
+both per benchmark module), the artifact automatically gains an ``"obs"``
+section — the metrics snapshot, the tracer's span/event summary with
+host-sync attribution — and the full Chrome trace is written next to it as
+``<name>.trace.json`` (load it in ``chrome://tracing`` or
+https://ui.perfetto.dev).  CI uploads both and gates budgets on the JSON
+via ``benchmarks/check_regressions.py``.
+"""
 from __future__ import annotations
 
 import json
 import time
 from pathlib import Path
 from typing import Callable, Dict, List
+
+from repro.obs import export as obs_export
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 REPO = Path(__file__).resolve().parents[1]
 
@@ -27,10 +41,26 @@ def row(name: str, seconds: float, derived: str) -> str:
 
 
 def write_json(name: str, obj: Dict) -> Path:
-    """Write a result dict to out/benchmarks/<name>.json (CI artifact)."""
+    """Write a result dict to out/benchmarks/<name>.json (CI artifact).
+
+    Under an active obs tracing context / metrics scope, attaches the
+    ``"obs"`` section (metrics snapshot + span/event summary with host-sync
+    attribution) and writes the Chrome trace to ``<name>.trace.json``."""
     out = REPO / "out" / "benchmarks"
     out.mkdir(parents=True, exist_ok=True)
     path = out / f"{name}.json"
+    obs: Dict = {}
+    snap = obs_metrics.snapshot()
+    if any(snap.values()):
+        obs["metrics"] = snap
+    tracer = obs_trace.current_tracer()
+    if tracer is not None and (tracer.spans() or tracer.orphan_events()):
+        obs["trace_summary"] = tracer.summary()
+        trace_path = out / f"{name}.trace.json"
+        obs_export.write_chrome_trace(trace_path, tracer)
+        obs["trace_file"] = trace_path.name
+    if obs:
+        obj = {**obj, "obs": obs}
     path.write_text(json.dumps(obj, indent=1))
     return path
 

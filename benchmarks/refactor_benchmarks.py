@@ -27,6 +27,7 @@ from repro.core import pipeline as pl
 from repro.core import refactor_fused as rff
 from repro.kernels import ops as kops
 from repro.data.fields import gaussian_field
+from repro.obs import trace as obs_trace
 
 CHUNK_ELEMS = 1 << 16
 N_CHUNKS = 6
@@ -86,6 +87,38 @@ def _run_mode(x: np.ndarray, fused: bool) -> Dict:
         "dispatches_per_chunk": dispatches / chunks,
         "host_syncs_per_chunk": snap["host_syncs"] / chunks,
         "codec_host_syncs": snap["host_syncs"],
+        "compression_ratio": pipe.stats.bytes_in / max(pipe.stats.bytes_out,
+                                                       1),
+    }
+
+
+def _tracing_overhead(x: np.ndarray) -> Dict:
+    """Wall-time cost of the obs layer on the fused write path.
+
+    ``disabled`` times the default state (no tracer installed: every
+    ``span()`` is one ContextVar read returning the shared null manager —
+    the <2%% contract measured against ``enabled``); ``enabled`` times the
+    same write under a full tracer."""
+    def write():
+        pl.ChunkedRefactorPipeline(chunk_elems=CHUNK_ELEMS, pipelined=True,
+                                   levels=LEVELS,
+                                   fused=True).refactor(x, "ovh")
+
+    def write_off():
+        with obs_trace.no_tracing():  # run.py traces the module: force off
+            write()
+
+    def write_traced():
+        with obs_trace.tracing():
+            write()
+
+    write_off()  # warm caches
+    t_off = timeit(write_off, warmup=1, iters=3)
+    t_on = timeit(write_traced, warmup=1, iters=3)
+    return {
+        "disabled_s": t_off,
+        "enabled_s": t_on,
+        "enabled_overhead_pct": (t_on - t_off) / t_off * 100.0,
     }
 
 
@@ -93,6 +126,7 @@ def run() -> list:
     x = gaussian_field((N_CHUNKS * CHUNK_ELEMS,), slope=-2.0, seed=12)
     per_piece = _run_mode(x, fused=False)
     fused = _run_mode(x, fused=True)
+    overhead = _tracing_overhead(x)
     result = {
         "chunk_elems": CHUNK_ELEMS,
         "n_chunks": N_CHUNKS,
@@ -108,6 +142,7 @@ def run() -> list:
             fused["dispatches_per_chunk"] < per_piece["dispatches_per_chunk"]),
         "fused_throughput_ge_per_piece": (
             fused["throughput_gbps"] >= per_piece["throughput_gbps"]),
+        "tracing": overhead,
     }
     write_json("refactor_benchmarks", result)
     lines = []
@@ -117,13 +152,17 @@ def run() -> list:
             f"refactor_write_{tag}", mode["seconds"],
             f"tput={mode['throughput_gbps']:.4f}GBps;"
             f"dispatches_per_chunk={mode['dispatches_per_chunk']:.1f};"
-            f"syncs_per_chunk={mode['host_syncs_per_chunk']:.1f}"))
+            f"syncs_per_chunk={mode['host_syncs_per_chunk']:.1f};"
+            f"compression={mode['compression_ratio']:.3f}"))
     lines.append(row(
         "refactor_write_fused_vs_per_piece", fused["seconds"],
         f"speedup={result['speedup']:.2f}x;"
         f"dispatch_reduction={result['dispatch_reduction']:.1f}x;"
         f"dispatches_ok={result['fused_dispatches_below_per_piece']};"
         f"throughput_ok={result['fused_throughput_ge_per_piece']}"))
+    lines.append(row(
+        "refactor_write_tracing_overhead", overhead["enabled_s"],
+        f"enabled_pct={overhead['enabled_overhead_pct']:.2f}"))
     return lines
 
 

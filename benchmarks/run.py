@@ -20,6 +20,9 @@ import inspect
 import sys
 import traceback
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+
 MODULES = [
     "bitplane_designs",
     "lossless_strategies",
@@ -50,8 +53,12 @@ def main() -> None:
             if (args.devices is not None
                     and "devices" in inspect.signature(mod.run).parameters):
                 kw["devices"] = args.devices
-            for line in mod.run(**kw):
-                print(line)
+            # per-module tracing + metrics scope: each module's write_json
+            # artifact carries ITS spans/counters only (common.write_json
+            # attaches the snapshot and the Chrome trace file)
+            with obs_metrics.scope(), obs_trace.tracing():
+                for line in mod.run(**kw):
+                    print(line)
             sys.stdout.flush()
         except Exception:  # noqa: BLE001
             failures += 1

@@ -51,9 +51,11 @@ def run(shape=(64, 64, 64), chunk_elems=40000) -> list:
         result["write_s"] = t_write
         result["stored_bytes"] = entry.stored_bytes
         result["raw_bytes"] = int(x.nbytes)
+        result["compression_ratio"] = x.nbytes / max(entry.stored_bytes, 1)
         result["codec_write"] = codec_w
         lines.append(row("store_write", t_write,
-                         f"{x.nbytes / 1e9 / t_write:.4f}GBps"))
+                         f"{x.nbytes / 1e9 / t_write:.4f}GBps;"
+                         f"compression={result['compression_ratio']:.3f}"))
         n_chunks = -(-x.size // chunk_elems)
         cb_w = codec_batches(codec_w)
         lines.append(row(

@@ -66,6 +66,7 @@ dt = sorted(ts)[1]  # median of 3: single samples are too noisy on shared CI
 print("RESULT " + json.dumps({{
     "devices": n_dev, "wall_s": dt, "chunks": pipe.stats.chunks,
     "bytes_in": pipe.stats.bytes_in, "bytes_out": pipe.stats.bytes_out,
+    "compression_ratio": pipe.stats.bytes_in / max(pipe.stats.bytes_out, 1),
     "gbps": pipe.stats.bytes_in / dt / 1e9}}))
 """
 
@@ -105,7 +106,8 @@ def run(devices: Optional[int] = None) -> List[str]:
             res["serialized_speedup"] = n * base / res["wall_s"]
             derived = (f"{res['gbps']:.4f}GBps;"
                        f"weak_efficiency={res['weak_efficiency']:.2f};"
-                       f"serialized_speedup={res['serialized_speedup']:.2f}")
+                       f"serialized_speedup={res['serialized_speedup']:.2f};"
+                       f"compression={res['compression_ratio']:.3f}")
         results.append(res)
         lines.append(row(f"weak_scaling_{n}dev", res["wall_s"], derived))
     write_json("weak_scaling", {

@@ -41,7 +41,16 @@ segments of a request are decoded through one vmapped
 for every decoded blob.
 
 All host materialization in this module goes through ``host_sync`` so tests
-and benchmarks can count syncs (``STATS``).
+and benchmarks can count syncs (``STATS``) — and, under an ``obs.tracing``
+context, every sync records a typed ``host_sync`` event tagged with its
+call-site label on the current span, so traces attribute each sync to the
+stage that caused it.
+
+``STATS`` is **context-local** (``obs.trace.ContextLocal``): each
+``stats_scope()`` context counts only its own work (dispatch-ahead worker
+threads run under a copied context and add to their caller's instance),
+while code outside any scope shares the process-global default — the
+historical behaviour.
 """
 from __future__ import annotations
 
@@ -55,13 +64,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import lossless as ll
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 
 # ------------------------------------------------------------------- stats --
 
 @dataclasses.dataclass
 class BatchStats:
-    """Counters for the batched engine (thread-safe, process-global).
+    """Counters for the batched engine (thread-safe).
 
     ``host_syncs`` counts explicit device->host materializations
     (``host_sync`` calls); the refactor write path performs O(1) of them per
@@ -97,12 +108,53 @@ class BatchStats:
                 setattr(self, f.name, 0)
 
 
-STATS = BatchStats()
+class _StatsProxy:
+    """Module-level ``STATS`` facade over the context-local instance.
+
+    Preserves the historical ``STATS.add/snapshot/reset`` surface (tests and
+    benchmarks keep working unchanged) while routing every access to the
+    current context's ``BatchStats`` — the process-global default outside
+    any ``stats_scope()``."""
+
+    def __init__(self, ctx: obs_trace.ContextLocal):
+        self._ctx = ctx
+
+    def add(self, **kw: int) -> None:
+        self._ctx.get().add(**kw)
+
+    def snapshot(self) -> Dict[str, int]:
+        return self._ctx.get().snapshot()
+
+    def reset(self) -> None:
+        self._ctx.get().reset()
+
+    def __getattr__(self, name: str):
+        return getattr(self._ctx.get(), name)
 
 
-def host_sync(tree):
-    """The engine's single door to host memory: one counted device_get."""
+_STATS_CTX = obs_trace.ContextLocal(BatchStats)
+STATS = _StatsProxy(_STATS_CTX)
+
+
+def stats_scope(stats: Optional[BatchStats] = None):
+    """Install a fresh (or given) ``BatchStats`` for the current context.
+
+    Worker threads spawned via ``obs.trace.wrap_for_thread`` inside the
+    scope share the same instance, so a pipelined write's dispatch-ahead
+    syncs land in the caller's scope; concurrent scopes never race on one
+    global (regression-tested in tests/test_obs.py)."""
+    return _STATS_CTX.scope(stats)
+
+
+def host_sync(tree, label: str = "host_sync"):
+    """The engine's single door to host memory: one counted device_get.
+
+    ``label`` names the call site (``codec.stats``, ``codec.payload``,
+    ``codec.decode``, ``encode.scalars``, ...) — under tracing it becomes
+    the ``host_sync`` event's attribution key, so benchmarks can report
+    syncs-per-chunk broken down by originating span."""
     STATS.add(host_syncs=1)
+    obs_trace.event(obs_trace.EV_HOST_SYNC, label=label)
     return jax.device_get(tree)
 
 
@@ -316,7 +368,7 @@ def _encode_buckets(stacked: Dict[int, jax.Array],
     for s, st in stacked.items():
         STATS.add(hist_batches=1)
         stats_dev[s] = _group_stats_batch(st)
-    stats_host = host_sync(stats_dev)
+    stats_host = host_sync(stats_dev, label="codec.stats")
 
     # stage 2: Algorithm-2 selection + codebooks (host, trivial)
     methods: Dict[int, str] = {}
@@ -353,7 +405,7 @@ def _encode_buckets(stacked: Dict[int, jax.Array],
         if d:
             sel = jnp.asarray([pos[i] for i in d], jnp.int32)
             pend.append(("dc", s, d, st[sel]))
-    mats = host_sync([p[3] for p in pend])
+    mats = host_sync([p[3] for p in pend], label="codec.payload")
 
     for (kind, s, idxs, _), mat in zip(pend, mats):
         if kind == "huffman":
@@ -381,6 +433,23 @@ def _encode_buckets(stacked: Dict[int, jax.Array],
             for j, i in enumerate(idxs):
                 segs[i] = ll.Segment("dc", s, {"raw": mat[j].copy()},
                                      {"n_syms": s})
+
+    # per-codec byte accounting (obs.metrics): bytes_in is the raw blob
+    # size, bytes_out the stored payload — compression_ratio per codec is
+    # bytes_in / bytes_out of the same series
+    per_codec: Dict[str, List[int]] = {}
+    for idxs in buckets.values():
+        for i in idxs:
+            seg = segs[i]
+            acc = per_codec.setdefault(seg.method, [0, 0, 0])
+            acc[0] += 1
+            acc[1] += seg.n_bytes
+            acc[2] += sum(a.nbytes for a in seg.payload.values())
+    m = obs_metrics.get()
+    for method, (n, bin_, bout) in per_codec.items():
+        m.inc("codec.groups", n, codec=method)
+        m.inc("codec.bytes_in", bin_, codec=method)
+        m.inc("codec.bytes_out", bout, codec=method)
 
 
 # ------------------------------------------------------------------- decode --
@@ -440,7 +509,7 @@ def decode_segments(segs: Sequence[ll.Segment]) -> List[np.ndarray]:
             raise ValueError(f"cannot decode method {method!r}")
 
     if pending:
-        mats = host_sync([p[1] for p in pending])
+        mats = host_sync([p[1] for p in pending], label="codec.decode")
         for (idxs, _), mat in zip(pending, mats):
             for j, i in enumerate(idxs):
                 outs[i] = np.asarray(mat[j], dtype=np.uint8)

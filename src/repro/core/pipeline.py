@@ -48,10 +48,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import lossless as ll
+from repro.core import lossless_batch as lb
 from repro.core import refactor as rf
 from repro.core import refactor_fused as rff
 from repro.core import retrieve as rtv
 from repro.core import sharded as shd
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 
 @dataclasses.dataclass
@@ -135,7 +138,10 @@ def overlap_map(n_items: int,
                 return
         ready.put((-1, None, None))
 
-    threading.Thread(target=feeder, daemon=True).start()
+    # the feeder joins the caller's context: its spans land in the caller's
+    # trace and its counter mutations in the caller's context-local stats
+    threading.Thread(target=obs_trace.wrap_for_thread(feeder),
+                     daemon=True).start()
     while True:
         i, s1, exc = ready.get()
         if exc is not None:
@@ -222,13 +228,25 @@ class ChunkedRefactorPipeline:
         return [self.sharded.shard_for(ci) for ci in range(n_chunks)]
 
     # -- stages ------------------------------------------------------------
+    # Each stage opens a span (``obs.trace``) carrying the chunk index (and
+    # owning-device ordinal when a mesh is set).  Spans record wall time
+    # WITHOUT any device barrier — dispatch-heavy stages show dispatch
+    # latency, the sync-bearing ``finish`` span shows where execution is
+    # actually awaited (its host_sync events mark the exact points).  The
+    # legacy ``stage_timing`` barrier mode is unchanged and serial-only.
+    def _span_attrs(self, ci: int) -> Dict[str, int]:
+        if self.mesh is None:
+            return {"chunk": ci}
+        return {"chunk": ci, "device": self.sharded.shard_for(ci)}
+
     def _copy_in(self, host_chunk: np.ndarray, ci: int) -> jax.Array:
         t0 = time.perf_counter()
-        dev = self.sharded.place(ci, host_chunk)
-        if self.stage_timing:
-            # barrier so copy_in_s measures the transfer, not its dispatch;
-            # skipped on the overlap path (no per-chunk sync)
-            _sync_stage(dev)
+        with obs_trace.span("write.copy_in", **self._span_attrs(ci)):
+            dev = self.sharded.place(ci, host_chunk)
+            if self.stage_timing:
+                # barrier so copy_in_s measures the transfer, not its
+                # dispatch; skipped on the overlap path (no per-chunk sync)
+                _sync_stage(dev)
         self.stats.copy_in_s += time.perf_counter() - t0
         return dev
 
@@ -241,12 +259,16 @@ class ChunkedRefactorPipeline:
         the owning device there too."""
         t0 = time.perf_counter()
         kw = {} if self.mag_bits is None else {"mag_bits": self.mag_bits}
-        if self.fused:
-            out = self.sharded.dispatch(ci, dev_chunk, name=name)
-        else:
-            out = rf.refactor_array(dev_chunk, name=name, levels=self.levels,
-                                    design=self.design, hybrid=self.hybrid,
-                                    backend=self.backend, fused=False, **kw)
+        with obs_trace.span("write.dispatch", **self._span_attrs(ci)):
+            if self.fused:
+                out = self.sharded.dispatch(ci, dev_chunk, name=name)
+            else:
+                out = rf.refactor_array(dev_chunk, name=name,
+                                        levels=self.levels,
+                                        design=self.design,
+                                        hybrid=self.hybrid,
+                                        backend=self.backend, fused=False,
+                                        **kw)
         self.stats.compute_s += time.perf_counter() - t0
         return out
 
@@ -278,10 +300,13 @@ class ChunkedRefactorPipeline:
 
     def _copy_out(self, ci: int, refd: rf.Refactored) -> bytes:
         t0 = time.perf_counter()
-        if self.sink is not None:
-            blob = self.sink(ci, refd)
-        else:
-            blob = rf.refactored_to_bytes(refd)
+        with obs_trace.span("write.serialize", **self._span_attrs(ci)):
+            if self.sink is not None:
+                blob = self.sink(ci, refd)
+            else:
+                blob = rf.refactored_to_bytes(refd)
+            obs_trace.event(obs_trace.EV_SERIALIZE, chunk=ci,
+                            bytes=len(blob))
         self.stats.copy_out_s += time.perf_counter() - t0
         return blob
 
@@ -298,9 +323,17 @@ class ChunkedRefactorPipeline:
     # -- driver --------------------------------------------------------------
     def refactor(self, x: np.ndarray, name: str = "var") -> List[bytes]:
         """Returns one serialized Refactored blob per chunk."""
+        with obs_trace.span("write.refactor", name=name):
+            return self._refactor(x, name)
+
+    def _refactor(self, x: np.ndarray, name: str) -> List[bytes]:
         flat = np.ascontiguousarray(x).reshape(-1)
         slices = _chunk_slices(flat.shape[0], self.chunk_elems)
         t_start = time.perf_counter()
+        # per-chunk budget gauges (write.syncs_per_chunk must stay O(1) on
+        # the fused path: 3 — one scalar gather + two in the codec engine)
+        syncs0 = lb.STATS.host_syncs
+        disp0 = rff.STATS.dispatches
         blobs: List[Optional[bytes]] = [None] * len(slices)
 
         if not self.pipelined:
@@ -341,8 +374,13 @@ class ChunkedRefactorPipeline:
                         errors.append(exc)
                 done.set()
 
-            t1 = threading.Thread(target=prefetcher, daemon=True)
-            t3 = threading.Thread(target=serializer, daemon=True)
+            # workers join the caller's context (wrap_for_thread): their
+            # spans land in the caller's trace and their counter mutations
+            # in the caller's context-local stats
+            t1 = threading.Thread(target=obs_trace.wrap_for_thread(prefetcher),
+                                  daemon=True)
+            t3 = threading.Thread(target=obs_trace.wrap_for_thread(serializer),
+                                  daemon=True)
             t1.start(); t3.start()
             # dispatch-ahead window: chunk k+1's fused encode is dispatched
             # (in flight on device) before chunk k's finish (host lossless
@@ -384,6 +422,12 @@ class ChunkedRefactorPipeline:
         self.stats.bytes_in += flat.nbytes
         self.stats.bytes_out += sum(len(b) for b in blobs)
         self.stats.wall_s += time.perf_counter() - t_start
+        if slices:
+            m = obs_metrics.REGISTRY.get()
+            m.gauge("write.syncs_per_chunk",
+                    (lb.STATS.host_syncs - syncs0) / len(slices))
+            m.gauge("write.dispatches_per_chunk",
+                    (rff.STATS.dispatches - disp0) / len(slices))
         return [b for b in blobs if b is not None]
 
 
@@ -418,6 +462,10 @@ class ChunkedReconstructPipeline:
         self.stats = PipelineStats()
 
     def reconstruct(self, blobs: Sequence[bytes], tol: float) -> np.ndarray:
+        with obs_trace.span("read.reconstruct", chunks=len(blobs)):
+            return self._reconstruct(blobs, tol)
+
+    def _reconstruct(self, blobs: Sequence[bytes], tol: float) -> np.ndarray:
         t_start = time.perf_counter()
         if not blobs:
             # np.concatenate([]) raises ValueError; an empty chunk list is a
@@ -426,19 +474,27 @@ class ChunkedReconstructPipeline:
             return np.zeros((0,), np.float32)
         outs: List[Optional[jax.Array]] = [None] * len(blobs)
 
+        def _attrs(ci: int) -> Dict[str, int]:
+            if self.mesh is None:
+                return {"chunk": ci}
+            return {"chunk": ci, "device": self.sharded.shard_for(ci)}
+
         def decompress(ci: int) -> rtv.ProgressiveReader:
             t0 = time.perf_counter()
-            reader = rtv.ProgressiveReader(rf.refactored_from_bytes(blobs[ci]),
-                                           backend=self.backend,
-                                           incremental=self.incremental,
-                                           device=self.sharded.device_for(ci))
+            with obs_trace.span("read.decompress", **_attrs(ci)):
+                reader = rtv.ProgressiveReader(
+                    rf.refactored_from_bytes(blobs[ci]),
+                    backend=self.backend,
+                    incremental=self.incremental,
+                    device=self.sharded.device_for(ci))
             self.stats.copy_in_s += time.perf_counter() - t0
             return reader
 
         def recompose(ci: int, reader: rtv.ProgressiveReader) -> None:
             t0 = time.perf_counter()
-            xh, _, fetched = reader.retrieve_device(tol)
-            outs[ci] = _block_stage(xh)
+            with obs_trace.span("read.recompose", **_attrs(ci)):
+                xh, _, fetched = reader.retrieve_device(tol)
+                outs[ci] = _block_stage(xh)
             self.stats.compute_s += time.perf_counter() - t0
             self.stats.bytes_in += fetched
 

@@ -56,6 +56,7 @@ from repro.core import lossless_batch as lb
 from repro.core import refactor as rf
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
+from repro.obs import trace as obs_trace
 
 
 # ------------------------------------------------------------------- stats --
@@ -246,10 +247,13 @@ def dispatch_encode(x, name: str = "var",
     if levels is None:
         levels = dc.num_levels(x.shape)
     group_planes = tuple(rf._group_plane_split(mag_bits, hybrid.group_size))
-    plan = fused_encode_plan(tuple(x.shape), levels, design, mag_bits,
-                             group_planes, backend)
-    outs = plan.run(x)
-    STATS.add(dispatches=1, pieces_encoded=len(plan.piece_ns))
+    with obs_trace.span("encode.dispatch", name=name):
+        plan = fused_encode_plan(tuple(x.shape), levels, design, mag_bits,
+                                 group_planes, backend)
+        outs = plan.run(x)
+        STATS.add(dispatches=1, pieces_encoded=len(plan.piece_ns))
+        obs_trace.event(obs_trace.EV_DISPATCH, kind="fused_encode", name=name,
+                        pieces=len(plan.piece_ns))
     exps, rest = outs[0], outs[1:]
     amax = rng = None
     if plan.has_scalars:
@@ -268,53 +272,56 @@ def finish_encode(p: PendingChunk, _scalars=None) -> rf.Refactored:
     sync; values must be exactly ``host_sync((p.exps, p.amax, p.rng))``."""
     STATS.add(finishes=1)
     plan = p.plan
-    scalars = (lb.host_sync((p.exps, p.amax, p.rng))
-               if _scalars is None else _scalars)
-    exps = [int(e) for e in scalars[0]]
-    amax = float(scalars[1]) if p.amax is not None else 0.0
-    rng = float(scalars[2]) if p.rng is not None else 0.0
+    with obs_trace.span("encode.finish", name=p.name):
+        scalars = (lb.host_sync((p.exps, p.amax, p.rng),
+                                label="encode.scalars")
+                   if _scalars is None else _scalars)
+        exps = [int(e) for e in scalars[0]]
+        amax = float(scalars[1]) if p.amax is not None else 0.0
+        rng = float(scalars[2]) if p.rng is not None else 0.0
 
-    segs_flat = lb.encode_groups_stacked(p.stacks, p.hybrid)
-    # scatter flattened rows back to (piece, kind, group) slots
-    sign_segs: Dict[int, ll.Segment] = {}
-    group_segs: Dict[Tuple[int, int], ll.Segment] = {}
-    n_words: Dict[int, int] = {}
-    base = 0
-    for ent in plan.entries:
-        for j, pi in enumerate(ent.piece_idxs):
-            seg = segs_flat[base + j]
-            if ent.kind == "sign":
-                sign_segs[pi] = seg
-                n_words[pi] = ent.n_words
-            else:
-                group_segs[(pi, ent.group)] = seg
-        base += len(ent.piece_idxs)
-    for pi in plan.empty_pieces:
-        # empty pieces reproduce the per-piece encoders exactly: every blob
-        # is zero-length, n_words is 0
-        sign_segs[pi] = ll.compress_group(np.zeros(0, np.uint8), p.hybrid)
-        for gi in range(len(plan.group_planes)):
-            group_segs[(pi, gi)] = ll.compress_group(np.zeros(0, np.uint8),
-                                                     p.hybrid)
-        n_words[pi] = 0
+        segs_flat = lb.encode_groups_stacked(p.stacks, p.hybrid)
+        # scatter flattened rows back to (piece, kind, group) slots
+        sign_segs: Dict[int, ll.Segment] = {}
+        group_segs: Dict[Tuple[int, int], ll.Segment] = {}
+        n_words: Dict[int, int] = {}
+        base = 0
+        for ent in plan.entries:
+            for j, pi in enumerate(ent.piece_idxs):
+                seg = segs_flat[base + j]
+                if ent.kind == "sign":
+                    sign_segs[pi] = seg
+                    n_words[pi] = ent.n_words
+                else:
+                    group_segs[(pi, ent.group)] = seg
+            base += len(ent.piece_idxs)
+        for pi in plan.empty_pieces:
+            # empty pieces reproduce the per-piece encoders exactly: every
+            # blob is zero-length, n_words is 0
+            sign_segs[pi] = ll.compress_group(np.zeros(0, np.uint8), p.hybrid)
+            for gi in range(len(plan.group_planes)):
+                group_segs[(pi, gi)] = ll.compress_group(
+                    np.zeros(0, np.uint8), p.hybrid)
+            n_words[pi] = 0
 
-    ndim = len(plan.shape)
-    group_planes = list(plan.group_planes)
-    metas: List[rf.PieceMeta] = []
-    for pi, n in enumerate(plan.piece_ns):
-        groups = [group_segs[(pi, gi)] for gi in range(len(group_planes))]
-        for g, seg in zip(group_planes, groups):
-            seg.meta["n_planes"] = g
-            seg.meta["n_words"] = n_words[pi]
-        metas.append(rf.PieceMeta(
-            n=n, exponent=exps[pi],
-            weight=1.0 if pi == 0 else float((1 << ndim) - 1),
-            sign_seg=sign_segs[pi], groups=groups,
-            group_planes=group_planes))
-    return rf.Refactored(name=p.name, shape=plan.shape, levels=plan.levels,
-                         design=plan.design, mag_bits=plan.mag_bits,
-                         group_size=p.hybrid.group_size, data_amax=amax,
-                         data_range=rng, pieces=metas)
+        ndim = len(plan.shape)
+        group_planes = list(plan.group_planes)
+        metas: List[rf.PieceMeta] = []
+        for pi, n in enumerate(plan.piece_ns):
+            groups = [group_segs[(pi, gi)] for gi in range(len(group_planes))]
+            for g, seg in zip(group_planes, groups):
+                seg.meta["n_planes"] = g
+                seg.meta["n_words"] = n_words[pi]
+            metas.append(rf.PieceMeta(
+                n=n, exponent=exps[pi],
+                weight=1.0 if pi == 0 else float((1 << ndim) - 1),
+                sign_seg=sign_segs[pi], groups=groups,
+                group_planes=group_planes))
+        return rf.Refactored(name=p.name, shape=plan.shape,
+                             levels=plan.levels, design=plan.design,
+                             mag_bits=plan.mag_bits,
+                             group_size=p.hybrid.group_size, data_amax=amax,
+                             data_range=rng, pieces=metas)
 
 
 def refactor_fused(x, name: str = "var", levels: Optional[int] = None,

@@ -49,6 +49,7 @@ from repro.core import lossless_batch as lb
 from repro.core import reconstruct as rc
 from repro.core import refactor as rf
 from repro.core import refactor_fused as rff
+from repro.obs import trace as obs_trace
 
 try:  # jax >= 0.4: canonical home of Mesh
     from jax.sharding import Mesh
@@ -181,20 +182,26 @@ class ShardedRefactorPlan:
 
     def place(self, ci: int, host_chunk) -> jax.Array:
         """Commit chunk ``ci``'s input to its owning device (H2D copy)."""
+        obs_trace.event(obs_trace.EV_DEVICE_PUT, chunk=ci,
+                        device=self.shard_for(ci))
         return _put(host_chunk, self.device_for(ci))
 
     def dispatch(self, ci: int, chunk, name: str = "var") -> rff.PendingChunk:
         """One collective-free fused dispatch on chunk ``ci``'s device.
 
         ``chunk`` may be a host array (placed here) or an already-placed
-        device array from ``place``."""
+        device array from ``place``.  Under tracing the span carries the
+        owning device ordinal, so the Chrome-trace export renders one track
+        per device (the round-boundary idle gaps become visible)."""
         if not isinstance(chunk, jax.Array):
             chunk = self.place(ci, chunk)
         STATS.add_dispatch(self.shard_for(ci))
         kw = {} if self.mag_bits is None else {"mag_bits": self.mag_bits}
-        return rff.dispatch_encode(chunk, name=name, levels=self.levels,
-                                   design=self.design, hybrid=self.hybrid,
-                                   backend=self.backend, **kw)
+        with obs_trace.span("sharded.dispatch", chunk=ci,
+                            device=self.shard_for(ci)):
+            return rff.dispatch_encode(chunk, name=name, levels=self.levels,
+                                       design=self.design, hybrid=self.hybrid,
+                                       backend=self.backend, **kw)
 
     def dispatch_round(self, chunks: Sequence[Tuple[int, np.ndarray]],
                        name: str = "var") -> List[rff.PendingChunk]:
@@ -212,9 +219,12 @@ class ShardedRefactorPlan:
         metadata (exponents/amax/range) across devices, then the per-chunk
         lossless engines run host-side in chunk order."""
         STATS.add(rounds=1)
-        scalars = lb.host_sync([(p.exps, p.amax, p.rng) for p in pendings])
-        return [rff.finish_encode(p, _scalars=s)
-                for p, s in zip(pendings, scalars)]
+        with obs_trace.span("sharded.finish_round", chunks=len(pendings)):
+            scalars = lb.host_sync([(p.exps, p.amax, p.rng)
+                                    for p in pendings],
+                                   label="encode.scalars")
+            return [rff.finish_encode(p, _scalars=s)
+                    for p, s in zip(pendings, scalars)]
 
     def refactor_chunks(self, chunks: Sequence[np.ndarray], name: str = "var"
                         ) -> List[rf.Refactored]:

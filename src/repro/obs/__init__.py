@@ -1,0 +1,28 @@
+"""repro.obs — unified tracing & metrics for the write/read/serving stack.
+
+Dependency-free (stdlib only).  Three pieces:
+
+* ``obs.trace``   — context-local span tracer (``span``/``event``/
+  ``tracing``), thread-aware via ``wrap_for_thread``, plus the
+  ``ContextLocal`` home for per-context stats objects.
+* ``obs.metrics`` — typed counters/gauges/histograms with ``snapshot()``.
+* ``obs.export``  — Chrome-trace / Perfetto JSON export with per-device
+  tracks, and an optional ``jax.profiler`` bridge (``tracing(jax_profiler=
+  True)``).
+
+See docs/observability.md for the span model, metric names, and the CI
+perf-regression gate (``benchmarks/check_regressions.py``).
+"""
+from repro.obs import export, metrics, trace
+from repro.obs.export import chrome_trace, write_chrome_trace
+from repro.obs.trace import (ContextLocal, Span, SpanEvent, Tracer,
+                             current_span, current_tracer, event, span,
+                             tracing, wrap_for_thread)
+
+__all__ = [
+    "export", "metrics", "trace",
+    "chrome_trace", "write_chrome_trace",
+    "ContextLocal", "Span", "SpanEvent", "Tracer",
+    "current_span", "current_tracer", "event", "span", "tracing",
+    "wrap_for_thread",
+]

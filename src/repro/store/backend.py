@@ -24,6 +24,9 @@ import os
 import threading
 from typing import Dict, Optional, Tuple
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+
 
 @dataclasses.dataclass
 class BackendStats:
@@ -195,15 +198,26 @@ class CachingBackend(FetchBackend):
 
     def read(self, key: str, offset: int, size: int) -> bytes:
         rng = (key, offset, size)
+        m = obs_metrics.REGISTRY.get()
         with self._lock:
             self.stats.reads += 1
             self.stats.bytes_served += size
             data = self._lookup(rng)
             if data is not None:
                 self.stats.cache_hits += 1
-                return data
-            self.stats.cache_misses += 1
-        return self._fetch_into_cache(rng)[0]
+            else:
+                self.stats.cache_misses += 1
+        hit = data is not None
+        obs_trace.event(obs_trace.EV_BACKEND_READ, key=key, bytes=size,
+                        hit=hit)
+        m.inc("backend.bytes_served", size)
+        m.inc("backend.cache_hits" if hit else "backend.cache_misses")
+        if hit:
+            return data
+        data, performed = self._fetch_into_cache(rng)
+        if performed:
+            m.inc("backend.bytes_fetched", size)
+        return data
 
     def size(self, key: str) -> int:
         return self.inner.size(key)

@@ -28,6 +28,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import threading
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -38,6 +39,8 @@ from repro.core import pipeline as pl
 from repro.core import qoi as qq
 from repro.core import sharded as shd
 from repro.core.retrieve import ProgressiveReader, SegmentSource
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.store import layout as lo
 
 
@@ -257,11 +260,13 @@ def _warm_and_fetch(plans: List[Tuple[ProgressiveReader, List[int]]],
         r, target = plans[i]
         wants = r.pending_deltas(target)
         if wants and hasattr(r.source, "warm"):
-            r.source.warm(wants)
+            with obs_trace.span("serve.warm", chunk=i, groups=len(wants)):
+                r.source.warm(wants)
         return target
 
     def fetch(i: int, target) -> int:
-        return plans[i][0]._fetch_to(target)
+        with obs_trace.span("serve.fetch", chunk=i):
+            return plans[i][0]._fetch_to(target)
 
     return sum(pl.overlap_map(len(plans), warm, fetch, depth=depth))
 
@@ -304,10 +309,16 @@ class Session:
     def retrieve(self, var: str, tol: float, relative: bool = False
                  ) -> Tuple[np.ndarray, float, int]:
         """Progressive max-norm retrieval; incremental across calls."""
-        r = self.reader(var)
-        x, bound, fetched = r.retrieve(tol, relative=relative)
+        t0 = time.perf_counter()
+        with obs_trace.span("serve.retrieve", session=self.sid, var=var):
+            r = self.reader(var)
+            x, bound, fetched = r.retrieve(tol, relative=relative)
         self.stats.requests += 1
         self.stats.bytes_fetched += fetched
+        m = obs_metrics.REGISTRY.get()
+        m.inc("serve.requests")
+        m.inc("serve.bytes_fetched", fetched)
+        m.observe("serve.retrieve_s", time.perf_counter() - t0)
         return x, bound, fetched
 
     def retrieve_qoi(self, variables: Sequence[str], q: qq.QoI, tau: float,
@@ -391,20 +402,31 @@ class RetrievalService:
                 if prev is not None:
                     target = [max(a, b) for a, b in zip(prev[1], target)]
                 plan_map[id(r)] = (r, target)
-        _warm_and_fetch(list(plan_map.values()), depth=self.depth)
-        # one cross-session batched delta decode over every distinct reader's
-        # staged plane groups (per mesh device when serving sharded)
-        shd.ShardedReconstructEngine.drain(
-            [cr.engine for ent in uniq.values()
-             for cr in ent["vr"].chunk_readers if cr.incremental])
-        results = []
-        for ent, first in req_entries:
-            vr = ent["vr"]
-            x, bound = vr.reconstruct()  # engines drained: delta recompose only
-            fetched = (vr.total_bytes_fetched - ent["before"]) if first else 0
-            ent["session"].stats.requests += 1
-            ent["session"].stats.bytes_fetched += fetched
-            results.append((x, bound, fetched))
+        t0 = time.perf_counter()
+        with obs_trace.span("serve.retrieve_many", requests=len(requests),
+                            readers=len(uniq)):
+            _warm_and_fetch(list(plan_map.values()), depth=self.depth)
+            # one cross-session batched delta decode over every distinct
+            # reader's staged plane groups (per mesh device when sharded)
+            with obs_trace.span("serve.decode", readers=len(uniq)):
+                shd.ShardedReconstructEngine.drain(
+                    [cr.engine for ent in uniq.values()
+                     for cr in ent["vr"].chunk_readers if cr.incremental])
+            results = []
+            for ent, first in req_entries:
+                vr = ent["vr"]
+                x, bound = vr.reconstruct()  # drained: delta recompose only
+                fetched = (vr.total_bytes_fetched - ent["before"]) \
+                    if first else 0
+                ent["session"].stats.requests += 1
+                ent["session"].stats.bytes_fetched += fetched
+                results.append((x, bound, fetched))
+        m = obs_metrics.REGISTRY.get()
+        m.inc("serve.requests", len(requests))
+        m.inc("serve.bytes_fetched",
+              sum(ent["vr"].total_bytes_fetched - ent["before"]
+                  for ent in uniq.values()))
+        m.observe("serve.retrieve_s", time.perf_counter() - t0)
         return results
 
     # -- accounting ----------------------------------------------------------

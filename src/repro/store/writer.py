@@ -12,6 +12,7 @@ exit, so a crashed write never leaves a store that parses but dangles.
 from __future__ import annotations
 
 import json
+import logging
 import os
 from typing import List, Optional
 
@@ -23,7 +24,11 @@ from repro.core import lossless as ll
 from repro.core import pipeline as pl
 from repro.core import refactor as rf
 from repro.core import sharded as shd
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.store import layout as lo
+
+logger = logging.getLogger("repro.store")
 
 
 class _SegmentFileWriter:
@@ -133,7 +138,8 @@ class DatasetWriter:
             fused=self.fused, dispatch_ahead=self.dispatch_ahead,
             mesh=self.mesh)
         try:
-            pipe.refactor(flat, name=name)
+            with obs_trace.span("store.write", var=name):
+                pipe.refactor(flat, name=name)
         finally:
             seg_writer.close()
 
@@ -151,6 +157,21 @@ class DatasetWriter:
                     if self.mesh is not None else None))
         self.manifest.variables[name] = entry
         self._written.add(name)
+        # compression accounting: raw input bytes vs bytes landed in the
+        # segment file (payloads + per-group headers).  ratio >= 1 is a win.
+        raw, stored = int(flat.nbytes), int(entry.stored_bytes)
+        m = obs_metrics.REGISTRY.get()
+        m.inc("store.bytes_raw", raw, var=name)
+        m.inc("store.bytes_stored", stored, var=name)
+        if stored:
+            m.gauge("store.compression_ratio", raw / stored, var=name)
+        if stored > raw:
+            logger.warning(
+                "store write of %r EXPANDED the data: stored %d bytes for "
+                "%d raw bytes (ratio %.3f < 1.0) — the lossless stage is "
+                "losing to the bitplane/group framing on this input; see "
+                "docs/observability.md#compression-accounting", name,
+                stored, raw, raw / max(stored, 1))
         return entry
 
     # ----------------------------------------------------------- finalize --
