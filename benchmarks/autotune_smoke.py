@@ -1,0 +1,132 @@
+"""Autotuner smoke benchmark (the CI autotune job).
+
+Exercises the full ``repro.tune`` loop on one small (shape, dtype) on the
+host backend and writes ``out/benchmarks/autotune_smoke.json`` with the
+properties the baseline gates:
+
+  * first run (``force=True``) performs a real search: candidates scored
+    through the HLO roofline model, measured probes run, winner stored in
+    the on-disk cache (``out/tune/``);
+  * second run is a CACHE HIT: the winner is replayed with NO re-search —
+    ``search.STATS.searches`` must not move and ``tune_s`` collapses;
+  * tuner overhead is budgeted against the default-config write time
+    (``tune_overhead_ratio``, gated by check_regressions);
+  * the winner can only tie or beat the default on the probe workload
+    (``probe_speedup >= 1.0`` — the measured-best-of-probes rule);
+  * a store written afterwards picks the cached winner up by default
+    (``DatasetWriter`` -> ``ChunkedRefactorPipeline`` tune-cache consult),
+    records it as the variable's manifest ``plan``, and round-trips through
+    ``RetrievalService`` replaying that plan.
+
+The shape is deliberately distinct from every other benchmark's chunk size
+so its cache entries cannot collide with theirs.
+"""
+from __future__ import annotations
+
+import tempfile
+
+import numpy as np
+
+from benchmarks.common import row, write_json
+
+SHAPE = (24576,)
+DTYPE = "float32"
+TOL = 1e-3
+
+
+def run() -> list:
+    from repro.core import decompose as dc
+    from repro.store.layout import DatasetStore
+    from repro.store.service import RetrievalService
+    from repro.store.writer import DatasetWriter
+    from repro.tune import cache as tcache
+    from repro.tune import search as tsearch
+    from repro.tune.config import DEFAULT_CONFIG
+    from repro.tune.search import _measure_write, _probe_chunk, tune
+
+    levels = dc.num_levels(SHAPE)
+    x = _probe_chunk(SHAPE, DTYPE)
+
+    # budget denominator: one default-config write of the same chunk
+    default_write_s = _measure_write(x, DEFAULT_CONFIG, levels)
+
+    s0 = tsearch.STATS.snapshot()
+    r1 = tune(SHAPE, dtype=DTYPE, levels=levels, probes=2, force=True)
+    s1 = tsearch.STATS.snapshot()
+    r2 = tune(SHAPE, dtype=DTYPE, levels=levels)
+    s2 = tsearch.STATS.snapshot()
+
+    default_probe_s = r1.probes[0][1] if r1.probes else float("nan")
+    winner_probe_s = (min(s for _, s in r1.probes)
+                      if r1.probes else float("nan"))
+
+    # the cached winner is consulted by DatasetWriter by default: the store's
+    # manifest plan must replay it, and the store must round-trip through the
+    # retrieval service at the requested tolerance
+    data = x.reshape(-1)
+    with tempfile.TemporaryDirectory() as root:
+        with DatasetWriter(root, chunk_elems=SHAPE[0], levels=levels) as w:
+            entry = w.write("v", data)
+        plan = dict(entry.plan or {})
+        store = DatasetStore.open(root)
+        xh, bound, fetched = (RetrievalService(store).open_session()
+                              .retrieve("v", TOL))
+        err = float(np.abs(xh.reshape(-1) - data).max())
+        store.close()
+
+    result = {
+        "shape": list(SHAPE), "dtype": DTYPE, "levels": levels,
+        "default_write_s": default_write_s,
+        "first_run": {
+            "cache_hit": r1.cache_hit,
+            "tune_s": r1.tune_s,
+            "searches": s1["searches"] - s0["searches"],
+            "candidates_scored": s1["candidates_scored"]
+            - s0["candidates_scored"],
+            "probes_run": s1["probes_run"] - s0["probes_run"],
+        },
+        "second_run": {
+            "cache_hit": r2.cache_hit,
+            "tune_s": r2.tune_s,
+            "searches_delta": s2["searches"] - s1["searches"],
+            "probes_delta": s2["probes_run"] - s1["probes_run"],
+            "config_identical": r2.config == r1.config,
+        },
+        "tune_overhead_ratio": r1.tune_s / max(default_write_s, 1e-12),
+        "tuned_config": r1.config.to_json(),
+        "default_probe_s": default_probe_s,
+        "winner_probe_s": winner_probe_s,
+        # measured-best-of-probes rule: tuned can only tie or beat default
+        "probe_speedup": default_probe_s / max(winner_probe_s, 1e-12),
+        "cache_stats": tcache.STATS.snapshot(),
+        "store": {
+            "plan_recorded": bool(plan),
+            "plan_matches_winner": all(
+                plan.get(k) == v for k, v in r1.config.to_json().items()
+                if k in ("design", "tiles_per_block", "unroll", "group_size")),
+            "bytes_fetched": int(fetched),
+            "bound": float(bound),
+            "max_err": err,
+            "roundtrip_ok": err <= TOL,
+        },
+    }
+    write_json("autotune_smoke", result)
+    return [
+        row("autotune_first_run", r1.tune_s,
+            f"candidates={result['first_run']['candidates_scored']};"
+            f"probes={result['first_run']['probes_run']};"
+            f"overhead={result['tune_overhead_ratio']:.0f}x_default_write"),
+        row("autotune_second_run", r2.tune_s,
+            f"cache_hit={r2.cache_hit};"
+            f"searches_delta={result['second_run']['searches_delta']}"),
+        row("autotune_probe_speedup", winner_probe_s,
+            f"speedup={result['probe_speedup']:.3f};"
+            f"design={r1.config.design};group={r1.config.group_size}"),
+        row("autotune_store_replay", result['store']['max_err'],
+            f"plan_matches={result['store']['plan_matches_winner']};"
+            f"roundtrip_ok={result['store']['roundtrip_ok']}"),
+    ]
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -8,7 +8,7 @@ from __future__ import annotations
 import json
 from pathlib import Path
 
-from benchmarks import roofline as R
+from benchmarks import roofline_dryrun as R
 
 REPO = Path(__file__).resolve().parents[1]
 PEAK, HBM, LINK = R.PEAK_FLOPS, R.HBM_BW, R.LINK_BW

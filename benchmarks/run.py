@@ -4,9 +4,12 @@
   Fig 6/7   bitplane_designs        Fig 8    lossless_strategies
   Fig 9     pipeline_overlap        Fig 10   weak_scaling
   Fig 11    end_to_end              Tab 2/3 + Fig 12/13/14  qoi_benchmarks
-  (ours)    grad_compress_bench     (ours)   roofline (from dry-run JSONs)
+  (ours)    grad_compress_bench     (ours)   roofline (fused-write HLO
+            roofline + measured probes, peaks from repro.tune.cost)
   (ours)    store_serving (cold/warm cache, sessions, bytes-vs-tol; also
             writes out/benchmarks/store_serving.json)
+  (ours)    autotune_smoke (repro.tune search + cache-hit replay + store
+            plan round-trip; writes out/benchmarks/autotune_smoke.json)
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--only MODULE] [--devices N]
 
@@ -33,6 +36,7 @@ MODULES = [
     "qoi_benchmarks",
     "grad_compress_bench",
     "store_serving",
+    "autotune_smoke",
     "roofline",
 ]
 

@@ -217,6 +217,30 @@ def estimate_rle(n_runs: int, n: int) -> float:
     return n / bytes_est if bytes_est else 1.0
 
 
+def exact_stored_bytes(method: str, n: int, total_bits: int = 0,
+                       n_runs: int = 0) -> int:
+    """EXACT ``len(Segment.to_bytes())`` of a group, computed BEFORE
+    encoding from selection-time stats (hist-derived ``total_bits`` for
+    huffman, ``n_runs`` for rle).
+
+    This is what the Algorithm-2 store-raw fallback compares: the CR
+    estimators above use the paper's approximate overhead constants, so near
+    the break-even point a "winning" codec can still serialize larger than
+    the raw bytes.  Constants are derived from ``Segment.to_bytes`` framing
+    (header 16 + meta count 4; meta entry 4+len(key)+8; payload entry
+    4+len(key)+5+data) and property-tested against real serializations in
+    tests/test_tune.py.  Meta entries callers add after encoding
+    (``n_planes``/``n_words``) are identical across methods and cancel."""
+    if method == "dc":        # meta n_syms; payload raw[n]
+        return 50 + n
+    if method == "huffman":   # meta n_syms,total_bits; chunk_offs,lengths,words
+        n_words = (total_bits + 31) // 32 + 1
+        return 361 + 4 * n_words + 4 * ((n + CHUNK - 1) // CHUNK + 1)
+    if method == "rle":       # meta n_syms; values[r] u8, lengths[r] u16
+        return 69 + 3 * n_runs
+    raise ValueError(f"unknown method {method!r}")
+
+
 # ---------------------------------------------------------------- segments --
 
 _METHODS = {"dc": 0, "huffman": 1, "rle": 2, "empty": 3}
@@ -419,7 +443,14 @@ class HybridConfig:
 
 
 def compress_group(data: np.ndarray, cfg: HybridConfig = HybridConfig()) -> Segment:
-    """Algorithm 2, inner decision for one merged group (byte symbols)."""
+    """Algorithm 2, inner decision for one merged group (byte symbols).
+
+    The paper's CR-threshold decision gains a store-raw fallback: when the
+    chosen codec's EXACT serialized size (``exact_stored_bytes``, computable
+    from the selection stats before encoding) would not beat storing the
+    group raw, fall back to ``dc`` — the estimators' approximate overheads
+    can declare a winner that still expands the payload.  ``force`` modes
+    skip the fallback (they exist to benchmark a specific codec)."""
     data = np.asarray(data, dtype=np.uint8)
     s = data.size
     _check_group_size(s)
@@ -432,10 +463,17 @@ def compress_group(data: np.ndarray, cfg: HybridConfig = HybridConfig()) -> Segm
     hist = np.bincount(data, minlength=256)
     r_h, lengths, codes = estimate_huffman(hist, s)
     if r_h > cfg.cr_threshold:
+        bits = int(np.sum(hist * lengths.astype(np.int64)))
+        if exact_stored_bytes("huffman", s, total_bits=bits) \
+                >= exact_stored_bytes("dc", s):
+            return dc_encode(data)
         return huffman_encode(data, hist=hist, codebook=(lengths, codes))
     _, _, nruns = _rle_scan(jnp.asarray(data))
     r_r = estimate_rle(int(nruns), s)
     if r_r > cfg.cr_threshold:
+        if exact_stored_bytes("rle", s, n_runs=int(nruns)) \
+                >= exact_stored_bytes("dc", s):
+            return dc_encode(data)
         return rle_encode(data)
     return dc_encode(data)
 

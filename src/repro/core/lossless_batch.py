@@ -262,8 +262,18 @@ def _select(size: int, hist: np.ndarray, n_runs: int, cfg: ll.HybridConfig
         return "dc", None
     r_h, lengths, codes = ll.estimate_huffman(hist, size)
     if r_h > cfg.cr_threshold:
+        # store-raw fallback (mirrors compress_group): the estimator's
+        # approximate overhead can pick a codec that still expands — compare
+        # EXACT serialized sizes from the device stats before committing
+        bits = int(np.sum(hist * lengths.astype(np.int64)))
+        if ll.exact_stored_bytes("huffman", size, total_bits=bits) \
+                >= ll.exact_stored_bytes("dc", size):
+            return "dc", None
         return "huffman", (lengths, codes)
     if ll.estimate_rle(n_runs, size) > cfg.cr_threshold:
+        if ll.exact_stored_bytes("rle", size, n_runs=n_runs) \
+                >= ll.exact_stored_bytes("dc", size):
+            return "dc", None
         return "rle", None
     return "dc", None
 

@@ -55,6 +55,7 @@ from repro.core import retrieve as rtv
 from repro.core import sharded as shd
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
+from repro import tune as tn
 
 
 @dataclasses.dataclass
@@ -187,35 +188,59 @@ class ChunkedRefactorPipeline:
     single-device path; a mesh of one device is byte-identical to it.
     """
 
-    def __init__(self, chunk_elems: int = 1 << 20, pipelined: bool = True,
-                 levels: int = 2, design: str = "register_block",
-                 hybrid: ll.HybridConfig = ll.HybridConfig(),
-                 backend: str = "auto",
+    def __init__(self, chunk_elems: Optional[int] = None,
+                 pipelined: bool = True,
+                 levels: int = 2, design: Optional[str] = None,
+                 hybrid: Optional[ll.HybridConfig] = None,
+                 backend: Optional[str] = None,
                  mag_bits: Optional[int] = None,
                  sink: Optional[Callable[[int, rf.Refactored], bytes]] = None,
-                 fused: bool = True, dispatch_ahead: int = 2,
+                 fused: bool = True, dispatch_ahead: Optional[int] = None,
                  stage_timing: Optional[bool] = None,
-                 mesh: shd.MeshLike = None):
-        self.chunk_elems = chunk_elems
+                 mesh: shd.MeshLike = None,
+                 config: Optional[tn.RefactorConfig] = None,
+                 use_tune_cache: bool = True):
+        # knob resolution order (most local wins): explicit legacy kwargs >
+        # explicit config= > cached autotuned winner (out/tune, consulted by
+        # default when no config is given) > built-in defaults
+        force = hybrid.force if hybrid is not None else None
+        base = tn.as_config(config, design=design, mag_bits=mag_bits,
+                            hybrid=hybrid, backend=backend,
+                            dispatch_ahead=dispatch_ahead,
+                            chunk_elems=chunk_elems)
+        if config is None and use_tune_cache:
+            mesh_probe = shd.resolve_mesh(
+                mesh if mesh is not None else base.mesh_devices)
+            n_dev = (mesh_probe.devices.size if mesh_probe is not None else 1)
+            cached = tn.cached_config(
+                shape=(base.chunk_elems or (1 << 20),), levels=levels,
+                backend=base.backend, n_devices=n_dev)
+            if cached is not None:
+                base = tn.as_config(cached, design=design, mag_bits=mag_bits,
+                                    hybrid=hybrid, backend=backend,
+                                    dispatch_ahead=dispatch_ahead,
+                                    chunk_elems=chunk_elems)
+        self.config = base
+        self.chunk_elems = base.chunk_elems or (1 << 20)
         self.pipelined = pipelined
         self.levels = levels
-        self.design = design
-        self.hybrid = hybrid
-        self.backend = backend
-        self.mag_bits = mag_bits
+        self.design = base.design
+        self.hybrid = base.hybrid(force=force)
+        self.backend = base.backend
+        self.mag_bits = base.mag_bits
         # sink(chunk_idx, refactored) -> serialized bytes: lets a store writer
         # address individual segments (repro.store.writer) instead of getting
         # one opaque blob per chunk.  Chunks reach the sink in index order.
         self.sink = sink
         self.fused = fused
-        self.dispatch_ahead = max(int(dispatch_ahead), 1)
+        self.dispatch_ahead = max(int(base.dispatch_ahead), 1)
         self.stage_timing = (not pipelined) if stage_timing is None \
             else bool(stage_timing)
         # chunk -> device placement (and the fused dispatch route when a
         # mesh is set); mesh=None keeps placement uncommitted (default device)
         self.sharded = shd.ShardedRefactorPlan(
-            mesh, levels=levels, design=design, mag_bits=mag_bits,
-            hybrid=hybrid, backend=backend)
+            mesh if mesh is not None else base.mesh_devices,
+            levels=levels, hybrid=self.hybrid, config=base)
         self.mesh = self.sharded.mesh
         self.stats = PipelineStats()
 
@@ -258,17 +283,14 @@ class ChunkedRefactorPipeline:
         finished ``Refactored``); the committed input keeps the compute on
         the owning device there too."""
         t0 = time.perf_counter()
-        kw = {} if self.mag_bits is None else {"mag_bits": self.mag_bits}
         with obs_trace.span("write.dispatch", **self._span_attrs(ci)):
             if self.fused:
                 out = self.sharded.dispatch(ci, dev_chunk, name=name)
             else:
                 out = rf.refactor_array(dev_chunk, name=name,
                                         levels=self.levels,
-                                        design=self.design,
-                                        hybrid=self.hybrid,
-                                        backend=self.backend, fused=False,
-                                        **kw)
+                                        hybrid=self.hybrid, fused=False,
+                                        config=self.config)
         self.stats.compute_s += time.perf_counter() - t0
         return out
 
@@ -450,14 +472,20 @@ class ChunkedReconstructPipeline:
     concatenation joins the shards.  ``mesh=None`` is today's single-device
     path (bit-identical; so is a mesh of one device)."""
 
-    def __init__(self, pipelined: bool = True, backend: str = "auto",
-                 incremental: bool = True, depth: int = 2,
-                 mesh: shd.MeshLike = None):
+    def __init__(self, pipelined: bool = True, backend: Optional[str] = None,
+                 incremental: bool = True, depth: Optional[int] = None,
+                 mesh: shd.MeshLike = None,
+                 config: Optional[tn.RefactorConfig] = None):
+        # config= replays a store's tuned plan on the read side (kernel
+        # tiling + overlap depth); explicit kwargs win, as on the write side
+        cfg = tn.as_config(config, backend=backend, depth=depth)
+        self.config = cfg
         self.pipelined = pipelined
-        self.backend = backend
+        self.backend = cfg.backend
         self.incremental = incremental
-        self.depth = max(int(depth), 1)
-        self.sharded = shd.ShardedReconstructEngine(mesh)
+        self.depth = max(int(cfg.depth), 1)
+        self.sharded = shd.ShardedReconstructEngine(
+            mesh if mesh is not None else cfg.mesh_devices)
         self.mesh = self.sharded.mesh
         self.stats = PipelineStats()
 
@@ -486,7 +514,8 @@ class ChunkedReconstructPipeline:
                     rf.refactored_from_bytes(blobs[ci]),
                     backend=self.backend,
                     incremental=self.incremental,
-                    device=self.sharded.device_for(ci))
+                    device=self.sharded.device_for(ci),
+                    config=self.config)
             self.stats.copy_in_s += time.perf_counter() - t0
             return reader
 

@@ -120,9 +120,17 @@ class IncrementalReconstructor:
     engines (the store service's cross-session batch)."""
 
     def __init__(self, ref: Refactored, backend: str = "auto",
-                 device: Optional[jax.Device] = None):
+                 device: Optional[jax.Device] = None,
+                 config=None):
+        from repro import tune as tn  # local: keep import graph flat
         self.ref = ref
         self.backend = backend
+        # replayed plan knobs (store manifest / tuned config): decode kernel
+        # tiling — part of every batch bucket key so one drained batch never
+        # mixes kernel variants
+        cfg = config if config is not None else tn.DEFAULT_CONFIG
+        self.tiles_per_block = cfg.tiles_per_block
+        self.unroll = cfg.unroll
         # owning device of this engine's state (mesh-sharded read path:
         # core.sharded places each chunk's engine on the chunk's device).
         # None = today's single-device path: uncommitted default-device
@@ -259,14 +267,15 @@ def batch_apply_pending(engines: Sequence[IncrementalReconstructor]) -> None:
         # kernel launch runs where its engine state lives
         return (int(p.rows.shape[0]), int(p.rows.shape[1]), p.row_offset,
                 e.ref.pieces[p.piece].n, e.ref.mag_bits, e.ref.design,
-                e.backend, e.device)
+                e.backend, e.tiles_per_block, e.unroll, e.device)
 
     for k, pos in lb.batch_jobs(jobs, key).items():
-        n_rows, _, offset, n, mag_bits, design, backend, _dev = k
+        n_rows, _, offset, n, mag_bits, design, backend, tiles, unroll, _dev = k
         batch = [jobs[p] for p in pos]
         stacked = jnp.stack([p.rows for _, p in batch])
         mags = kops.decode_bitplanes_offset_batch(
-            stacked, mag_bits, n, offset, design, backend=backend)
+            stacked, mag_bits, n, offset, design, backend=backend,
+            tiles_per_block=tiles, unroll=unroll)
         row_bytes = 4 * n_rows * int(stacked.shape[2])
         STATS.add(delta_decode_batches=1, rows_decoded=n_rows * len(batch),
                   bytes_decoded=row_bytes * len(batch))
@@ -277,14 +286,16 @@ def batch_apply_pending(engines: Sequence[IncrementalReconstructor]) -> None:
     def sign_key(job):
         e, pi, rows = job
         return (int(rows.shape[1]), e.ref.pieces[pi].n, e.ref.design,
-                e.backend, e.device)
+                e.backend, e.tiles_per_block, e.unroll, e.device)
 
     for k, pos in lb.batch_jobs(sign_jobs, sign_key).items():
-        _, n, design, backend, _dev = k
+        _, n, design, backend, tiles, unroll, _dev = k
         batch = [sign_jobs[p] for p in pos]
         stacked = jnp.stack([rows for _, _, rows in batch])
         sgs = kops.decode_bitplanes_batch(stacked, 1, n, design,
-                                          backend=backend)
+                                          backend=backend,
+                                          tiles_per_block=tiles,
+                                          unroll=unroll)
         # sign planes count toward the delta bytes: the full-decode baseline
         # (ProgressiveReader.decoded_plane_bytes) includes them too
         row_bytes = 4 * int(stacked.shape[2])

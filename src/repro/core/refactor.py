@@ -101,12 +101,13 @@ def refactor_array(
     x: np.ndarray | jax.Array,
     name: str = "var",
     levels: Optional[int] = None,
-    design: str = "register_block",
-    mag_bits: int = al.DEFAULT_MAG_BITS,
-    hybrid: ll.HybridConfig = ll.HybridConfig(),
-    backend: str = "auto",
+    design: Optional[str] = None,
+    mag_bits: Optional[int] = None,
+    hybrid: Optional[ll.HybridConfig] = None,
+    backend: Optional[str] = None,
     batched: bool = True,
     fused: Optional[bool] = None,
+    config: Optional["tn.RefactorConfig"] = None,
 ) -> Refactored:
     """Refactor one array.
 
@@ -118,8 +119,15 @@ def refactor_array(
     batched=True`` is the piece-at-a-time device-resident path (~3 jitted
     dispatches per piece); ``batched=False`` the original per-group path.
     All three produce byte-identical serializations — the slower paths stay
-    as bit-exactness oracles.
+    as bit-exactness oracles, and all three honor the same effective
+    ``RefactorConfig`` (``config=`` or legacy kwargs; explicit kwargs win).
     """
+    from repro import tune as tn  # local: keep import graph flat
+    cfg = tn.as_config(config, design=design, mag_bits=mag_bits,
+                       hybrid=hybrid, backend=backend)
+    force = hybrid.force if hybrid is not None else None
+    design, mag_bits = cfg.design, cfg.resolved_mag_bits()
+    hybrid, backend = cfg.hybrid(force=force), cfg.backend
     if fused is None:
         fused = batched
     elif fused and not batched:
@@ -127,9 +135,8 @@ def refactor_array(
                          "replaces the batched path, not the per-group oracle")
     if fused and batched:
         from repro.core import refactor_fused as rff  # local: no import cycle
-        return rff.refactor_fused(x, name=name, levels=levels, design=design,
-                                  mag_bits=mag_bits, hybrid=hybrid,
-                                  backend=backend)
+        return rff.refactor_fused(x, name=name, levels=levels,
+                                  hybrid=hybrid, config=cfg)
     x = jnp.asarray(x, dtype=jnp.float32)
     if levels is None:
         levels = dc.num_levels(x.shape)
@@ -140,7 +147,7 @@ def refactor_array(
     if not batched:
         return _refactor_array_pergroup(x, pieces, name, levels, design,
                                         mag_bits, hybrid, backend,
-                                        group_planes, ndim)
+                                        group_planes, ndim, cfg)
 
     # -- device-resident batched path ---------------------------------------
     # Stage every piece's planes + per-group blobs on device; collect the
@@ -154,8 +161,12 @@ def refactor_array(
     for piece in pieces:
         mag, sign, e = al.align_encode(piece, mag_bits)
         scalars.append(e)
-        planes = kops.encode_bitplanes(mag, mag_bits, design, backend=backend)
-        sign_planes = kops.encode_bitplanes(sign, 1, design, backend=backend)
+        planes = kops.encode_bitplanes(
+            mag, mag_bits, design, backend=backend,
+            tiles_per_block=cfg.tiles_per_block, unroll=cfg.unroll)
+        sign_planes = kops.encode_bitplanes(
+            sign, 1, design, backend=backend,
+            tiles_per_block=cfg.tiles_per_block, unroll=cfg.unroll)
         n_words_all.append(int(planes.shape[1]))
         blobs.append(_device_bytes(sign_planes))
         row = 0
@@ -191,7 +202,8 @@ def refactor_array(
 
 
 def _refactor_array_pergroup(x, pieces, name, levels, design, mag_bits,
-                             hybrid, backend, group_planes, ndim) -> Refactored:
+                             hybrid, backend, group_planes, ndim,
+                             cfg) -> Refactored:
     """Original per-(piece, group) path: one host round-trip per group.
 
     Kept as the bit-exactness oracle for the batched engine (and for
@@ -201,8 +213,12 @@ def _refactor_array_pergroup(x, pieces, name, levels, design, mag_bits,
     metas: List[PieceMeta] = []
     for pi, piece in enumerate(pieces):
         mag, sign, e = al.align_encode(piece, mag_bits)
-        planes = kops.encode_bitplanes(mag, mag_bits, design, backend=backend)
-        sign_planes = kops.encode_bitplanes(sign, 1, design, backend=backend)
+        planes = kops.encode_bitplanes(
+            mag, mag_bits, design, backend=backend,
+            tiles_per_block=cfg.tiles_per_block, unroll=cfg.unroll)
+        sign_planes = kops.encode_bitplanes(
+            sign, 1, design, backend=backend,
+            tiles_per_block=cfg.tiles_per_block, unroll=cfg.unroll)
         sign_seg = ll.compress_group(np.asarray(sign_planes).view(np.uint8).reshape(-1),
                                      hybrid)
         groups: List[ll.Segment] = []

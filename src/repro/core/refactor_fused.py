@@ -57,6 +57,7 @@ from repro.core import refactor as rf
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 from repro.obs import trace as obs_trace
+from repro import tune as tn
 
 
 # ------------------------------------------------------------------- stats --
@@ -235,21 +236,31 @@ class PendingChunk:
 
 def dispatch_encode(x, name: str = "var",
                     levels: Optional[int] = None,
-                    design: str = "register_block",
-                    mag_bits: int = al.DEFAULT_MAG_BITS,
-                    hybrid: ll.HybridConfig = ll.HybridConfig(),
-                    backend: str = "auto") -> PendingChunk:
+                    design: Optional[str] = None,
+                    mag_bits: Optional[int] = None,
+                    hybrid: Optional[ll.HybridConfig] = None,
+                    backend: Optional[str] = None,
+                    config: Optional[tn.RefactorConfig] = None
+                    ) -> PendingChunk:
     """Launch one chunk's whole encode chain as a single jitted dispatch.
 
     Returns immediately with device handles; no host synchronization
-    happens until ``finish_encode``."""
+    happens until ``finish_encode``.  All knobs normalize into ONE
+    ``RefactorConfig`` (``config=`` or legacy kwargs — explicit kwargs win;
+    see ``repro.tune.config.as_config``), and the fused program is keyed on
+    that config's fields, kernel tiling included."""
+    cfg = tn.as_config(config, design=design, mag_bits=mag_bits,
+                       hybrid=hybrid, backend=backend)
+    hybrid = cfg.hybrid(force=hybrid.force if hybrid is not None else None)
+    mag_bits = cfg.resolved_mag_bits()
     x = jnp.asarray(x, dtype=jnp.float32)
     if levels is None:
         levels = dc.num_levels(x.shape)
     group_planes = tuple(rf._group_plane_split(mag_bits, hybrid.group_size))
     with obs_trace.span("encode.dispatch", name=name):
-        plan = fused_encode_plan(tuple(x.shape), levels, design, mag_bits,
-                                 group_planes, backend)
+        plan = fused_encode_plan(tuple(x.shape), levels, cfg.design, mag_bits,
+                                 group_planes, cfg.backend,
+                                 cfg.tiles_per_block, cfg.unroll)
         outs = plan.run(x)
         STATS.add(dispatches=1, pieces_encoded=len(plan.piece_ns))
         obs_trace.event(obs_trace.EV_DISPATCH, kind="fused_encode", name=name,
@@ -325,11 +336,13 @@ def finish_encode(p: PendingChunk, _scalars=None) -> rf.Refactored:
 
 
 def refactor_fused(x, name: str = "var", levels: Optional[int] = None,
-                   design: str = "register_block",
-                   mag_bits: int = al.DEFAULT_MAG_BITS,
-                   hybrid: ll.HybridConfig = ll.HybridConfig(),
-                   backend: str = "auto") -> rf.Refactored:
+                   design: Optional[str] = None,
+                   mag_bits: Optional[int] = None,
+                   hybrid: Optional[ll.HybridConfig] = None,
+                   backend: Optional[str] = None,
+                   config: Optional[tn.RefactorConfig] = None
+                   ) -> rf.Refactored:
     """One-call fused refactor: ``finish_encode(dispatch_encode(...))``."""
     return finish_encode(dispatch_encode(
         x, name=name, levels=levels, design=design, mag_bits=mag_bits,
-        hybrid=hybrid, backend=backend))
+        hybrid=hybrid, backend=backend, config=config))

@@ -87,12 +87,18 @@ class ProgressiveReader:
     ``incremental=False`` keeps host plane prefixes and re-decodes
     everything per call — the bit-exactness oracle."""
 
-    def __init__(self, ref: Refactored, backend: str = "auto",
+    def __init__(self, ref: Refactored, backend: Optional[str] = None,
                  source: Optional[SegmentSource] = None,
                  incremental: bool = True,
-                 device: Optional[jax.Device] = None):
+                 device: Optional[jax.Device] = None,
+                 config: Optional["tn.RefactorConfig"] = None):
+        from repro import tune as tn  # local: keep import graph flat
+        # config= replays a store's tuned plan (manifest VariableEntry.plan):
+        # decode kernels run with the same tiling the writer used
+        cfg = tn.as_config(config, backend=backend)
         self.ref = ref
-        self.backend = backend
+        self.backend = cfg.backend
+        self.config = cfg
         self.source = source if source is not None else InlineSegmentSource(ref)
         self.state = [_PieceState() for _ in ref.pieces]
         self.total_bytes_fetched = 0
@@ -100,8 +106,8 @@ class ProgressiveReader:
         # mesh-sharded read path: pin the engine's state to the chunk's
         # owning device (core.sharded); None = uncommitted (today's path)
         self.device = device
-        self.engine = (rc.IncrementalReconstructor(ref, backend=backend,
-                                                   device=device)
+        self.engine = (rc.IncrementalReconstructor(ref, backend=self.backend,
+                                                   device=device, config=cfg)
                        if incremental else None)
 
     # ----------------------------------------------------------- planning --
@@ -258,10 +264,16 @@ class ProgressiveReader:
             if p_kept == 0 or pm.n == 0:
                 pieces_dec.append(jnp.zeros((pm.n,), jnp.float32))
                 continue
-            mag = kops.decode_bitplanes(jnp.asarray(st.planes), r.mag_bits,
-                                        pm.n, r.design, backend=self.backend)
-            sign = kops.decode_bitplanes(jnp.asarray(st.sign), 1, pm.n,
-                                         r.design, backend=self.backend)
+            mag = kops.decode_bitplanes(
+                jnp.asarray(st.planes), r.mag_bits, pm.n, r.design,
+                backend=self.backend,
+                tiles_per_block=self.config.tiles_per_block,
+                unroll=self.config.unroll)
+            sign = kops.decode_bitplanes(
+                jnp.asarray(st.sign), 1, pm.n, r.design,
+                backend=self.backend,
+                tiles_per_block=self.config.tiles_per_block,
+                unroll=self.config.unroll)
             x = al.align_decode(mag, sign, jnp.int32(pm.exponent),
                                 r.mag_bits, planes_kept=p_kept)
             pieces_dec.append(x)

@@ -50,6 +50,7 @@ from repro.core import reconstruct as rc
 from repro.core import refactor as rf
 from repro.core import refactor_fused as rff
 from repro.obs import trace as obs_trace
+from repro import tune as tn
 
 try:  # jax >= 0.4: canonical home of Mesh
     from jax.sharding import Mesh
@@ -157,17 +158,23 @@ class ShardedRefactorPlan:
 
     def __init__(self, mesh: MeshLike,
                  levels: Optional[int] = None,
-                 design: str = "register_block",
+                 design: Optional[str] = None,
                  mag_bits: Optional[int] = None,
-                 hybrid: ll.HybridConfig = ll.HybridConfig(),
-                 backend: str = "auto"):
-        self.mesh = resolve_mesh(mesh)
+                 hybrid: Optional[ll.HybridConfig] = None,
+                 backend: Optional[str] = None,
+                 config: Optional[tn.RefactorConfig] = None):
+        force = hybrid.force if hybrid is not None else None
+        cfg = tn.as_config(config, design=design, mag_bits=mag_bits,
+                           hybrid=hybrid, backend=backend)
+        self.config = cfg
+        self.mesh = resolve_mesh(mesh if mesh is not None
+                                 else cfg.mesh_devices)
         self.devices = chunk_devices(self.mesh)
         self.levels = levels
-        self.design = design
-        self.mag_bits = mag_bits
-        self.hybrid = hybrid
-        self.backend = backend
+        self.design = cfg.design
+        self.mag_bits = cfg.mag_bits
+        self.hybrid = cfg.hybrid(force=force)
+        self.backend = cfg.backend
 
     @property
     def n_shards(self) -> int:
@@ -196,12 +203,10 @@ class ShardedRefactorPlan:
         if not isinstance(chunk, jax.Array):
             chunk = self.place(ci, chunk)
         STATS.add_dispatch(self.shard_for(ci))
-        kw = {} if self.mag_bits is None else {"mag_bits": self.mag_bits}
         with obs_trace.span("sharded.dispatch", chunk=ci,
                             device=self.shard_for(ci)):
             return rff.dispatch_encode(chunk, name=name, levels=self.levels,
-                                       design=self.design, hybrid=self.hybrid,
-                                       backend=self.backend, **kw)
+                                       hybrid=self.hybrid, config=self.config)
 
     def dispatch_round(self, chunks: Sequence[Tuple[int, np.ndarray]],
                        name: str = "var") -> List[rff.PendingChunk]:

@@ -25,6 +25,16 @@ def _resolve(backend: str) -> str:
     return backend
 
 
+def config_kwargs(config) -> dict:
+    """Kernel-facing kwargs of a ``repro.tune.RefactorConfig`` (duck-typed
+    so this module stays import-light): expand with ``**`` into any
+    encode/decode call below.  The single point coupling the kernel knob
+    names to the config schema."""
+    return {"design": config.design, "backend": config.backend,
+            "tiles_per_block": config.tiles_per_block,
+            "unroll": config.unroll}
+
+
 @functools.partial(jax.jit, static_argnames=("num_planes", "design", "backend",
                                              "tiles_per_block", "unroll"))
 def encode_bitplanes(mag: jax.Array, num_planes: int,

@@ -119,6 +119,13 @@ class VariableEntry:
     # guarantee), and absent (None) means single-device.  Readers take it
     # modulo their own mesh size, so N-device stores read fine on M devices.
     shards: Optional[List[int]] = None
+    # the effective RefactorConfig the variable was WRITTEN with
+    # (repro.tune.config.RefactorConfig.to_json()): readers replay the tuned
+    # plan — decode kernel tiling, overlap depth — instead of re-guessing
+    # defaults.  Absent (None) on stores written before autotuning existed;
+    # the authoritative quality fields (design/mag_bits/group_size) above
+    # stay where they always were, the plan only adds the perf knobs.
+    plan: Optional[Dict] = None
 
     @property
     def n_elements(self) -> int:
@@ -141,11 +148,18 @@ class VariableEntry:
                "chunks": [c.to_json() for c in self.chunks]}
         if self.shards is not None:
             out["shards"] = list(self.shards)
+        if self.plan is not None:
+            out["plan"] = dict(self.plan)
         return out
 
     @staticmethod
     def from_json(j: Dict) -> "VariableEntry":
+        # unknown keys in j are ignored (forward compatibility: stores
+        # written by newer code must stay readable), and optional keys
+        # (shards, plan) may be absent (backward compatibility: pre-shards /
+        # pre-plan stores load and serve) — tested in tests/test_store.py
         shards = j.get("shards")
+        plan = j.get("plan")
         return VariableEntry(
             name=str(j["name"]), shape=tuple(int(s) for s in j["shape"]),
             levels=int(j["levels"]), design=str(j["design"]),
@@ -154,7 +168,8 @@ class VariableEntry:
             segment_file=str(j["segment_file"]),
             amax=float(j["amax"]), range=float(j["range"]),
             chunks=[ChunkEntry.from_json(c) for c in j["chunks"]],
-            shards=None if shards is None else [int(s) for s in shards])
+            shards=None if shards is None else [int(s) for s in shards],
+            plan=None if plan is None else dict(plan))
 
 
 @dataclasses.dataclass

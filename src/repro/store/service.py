@@ -42,6 +42,7 @@ from repro.core.retrieve import ProgressiveReader, SegmentSource
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
 from repro.store import layout as lo
+from repro import tune as tn
 
 
 class StoreSegmentSource(SegmentSource):
@@ -130,23 +131,32 @@ class StoreVariableReader:
     # no cross-chunk batching or caching.  It exists for bit-exactness
     # debugging against the engine, not for serving.
     def __init__(self, store: lo.DatasetStore, name: str,
-                 backend: str = "auto", incremental: bool = True,
-                 depth: int = 2, mesh: shd.MeshLike = None):
+                 backend: Optional[str] = None, incremental: bool = True,
+                 depth: Optional[int] = None, mesh: shd.MeshLike = None):
         var = store.variable(name)
         self.var = var
         self.name = name
-        self.backend = backend
+        # replay the write-time plan recorded in the manifest (tuned decode
+        # kernel tiling + overlap depth); absent on pre-autotune stores the
+        # built-in defaults apply.  Explicit kwargs win over the plan, the
+        # same resolution order as the write side.
+        plan_cfg = (tn.RefactorConfig.from_json(var.plan)
+                    if var.plan is not None else None)
+        cfg = tn.as_config(plan_cfg, backend=backend, depth=depth)
+        self.plan_config = cfg
+        self.backend = cfg.backend
         self.incremental = incremental
-        self.depth = max(int(depth), 1)  # overlap feeder look-ahead
+        self.depth = max(int(cfg.depth), 1)  # overlap feeder look-ahead
         # chunk -> device placement: the manifest's recorded shard map (if
         # the variable was written sharded) taken modulo this mesh's size,
         # else round-robin; mesh=None keeps every engine uncommitted
         self.sharded = shd.ShardedReconstructEngine(mesh, shards=var.shards)
         self.chunk_readers = [
-            ProgressiveReader(lo.chunk_refactored(var, ci), backend=backend,
+            ProgressiveReader(lo.chunk_refactored(var, ci),
                               source=StoreSegmentSource(store, name, ci),
                               incremental=incremental,
-                              device=self.sharded.device_for(ci))
+                              device=self.sharded.device_for(ci),
+                              config=cfg)
             for ci in range(len(var.chunks))]
         self.ref = _VarRef(var, self.chunk_readers)
         # assembled-variable cache, keyed on the fetch signature; per-chunk
@@ -338,13 +348,15 @@ class Session:
 class RetrievalService:
     """Multiplexes concurrent progressive-retrieval sessions over one store."""
 
-    def __init__(self, store: lo.DatasetStore, backend: str = "auto",
-                 incremental: bool = True, depth: int = 2,
+    def __init__(self, store: lo.DatasetStore, backend: Optional[str] = None,
+                 incremental: bool = True, depth: Optional[int] = None,
                  mesh: shd.MeshLike = None):
         self.store = store
+        # None lets each variable reader replay its manifest plan (tuned
+        # decode knobs); an explicit value overrides the plan for every var
         self.backend = backend
         self.incremental = incremental
-        self.depth = max(int(depth), 1)  # overlap feeder look-ahead
+        self.depth = depth
         # mesh-sharded serving: every session's variable readers place their
         # chunk engines across this mesh's devices (core.sharded)
         self.mesh = shd.resolve_mesh(mesh)
@@ -402,10 +414,15 @@ class RetrievalService:
                 if prev is not None:
                     target = [max(a, b) for a, b in zip(prev[1], target)]
                 plan_map[id(r)] = (r, target)
+        # service-level depth override wins; else the deepest involved
+        # reader's (plan-replayed) look-ahead drives the batch fetch
+        depth = (max((ent["vr"].depth for ent in uniq.values()),
+                     default=tn.DEFAULT_CONFIG.depth)
+                 if self.depth is None else max(int(self.depth), 1))
         t0 = time.perf_counter()
         with obs_trace.span("serve.retrieve_many", requests=len(requests),
                             readers=len(uniq)):
-            _warm_and_fetch(list(plan_map.values()), depth=self.depth)
+            _warm_and_fetch(list(plan_map.values()), depth=depth)
             # one cross-session batched delta decode over every distinct
             # reader's staged plane groups (per mesh device when sharded)
             with obs_trace.span("serve.decode", readers=len(uniq)):

@@ -18,7 +18,6 @@ from typing import List, Optional
 
 import numpy as np
 
-from repro.core import align as al
 from repro.core import decompose as dc
 from repro.core import lossless as ll
 from repro.core import pipeline as pl
@@ -27,6 +26,7 @@ from repro.core import sharded as shd
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
 from repro.store import layout as lo
+from repro import tune as tn
 
 logger = logging.getLogger("repro.store")
 
@@ -65,15 +65,21 @@ class DatasetWriter:
 
     def __init__(self, root: str, chunk_elems: int = 1 << 20,
                  levels: Optional[int] = None,
-                 design: str = "register_block",
+                 design: Optional[str] = None,
                  mag_bits: Optional[int] = None,
-                 hybrid: ll.HybridConfig = ll.HybridConfig(),
-                 pipelined: bool = True, backend: str = "auto",
-                 fused: bool = True, dispatch_ahead: int = 2,
-                 mesh: shd.MeshLike = None):
+                 hybrid: Optional[ll.HybridConfig] = None,
+                 pipelined: bool = True, backend: Optional[str] = None,
+                 fused: bool = True, dispatch_ahead: Optional[int] = None,
+                 mesh: shd.MeshLike = None,
+                 config: Optional[tn.RefactorConfig] = None,
+                 use_tune_cache: bool = True):
         self.root = root
         self.chunk_elems = int(chunk_elems)
         self.levels = levels
+        # knob resolution happens per write() in ChunkedRefactorPipeline
+        # (explicit kwargs > config= > cached autotuned winner > defaults);
+        # the writer just forwards, then records the pipeline's EFFECTIVE
+        # config as the variable's manifest ``plan`` so readers replay it.
         self.design = design
         self.mag_bits = mag_bits
         self.hybrid = hybrid
@@ -83,6 +89,8 @@ class DatasetWriter:
         # core.refactor_fused / ChunkedRefactorPipeline dispatch-ahead)
         self.fused = fused
         self.dispatch_ahead = dispatch_ahead
+        self.config = config
+        self.use_tune_cache = use_tune_cache
         # mesh-sharded write (core.sharded): chunks round-robin across the
         # mesh's devices; the chunk -> shard map is recorded per variable in
         # the manifest.  Payload bytes are placement-independent (the
@@ -136,25 +144,29 @@ class DatasetWriter:
             levels=levels, design=self.design, hybrid=self.hybrid,
             backend=self.backend, mag_bits=self.mag_bits, sink=sink,
             fused=self.fused, dispatch_ahead=self.dispatch_ahead,
-            mesh=self.mesh)
+            mesh=self.mesh, config=self.config,
+            use_tune_cache=self.use_tune_cache)
         try:
             with obs_trace.span("store.write", var=name):
                 pipe.refactor(flat, name=name)
         finally:
             seg_writer.close()
 
+        # manifest fields record the EFFECTIVE knobs the pipeline resolved
+        # (legacy kwargs > config= > tune cache > defaults), and ``plan``
+        # captures the full config so readers replay the tuned plan
         entry = lo.VariableEntry(
             name=name, shape=shape, levels=levels,
-            design=self.design,
-            mag_bits=self.mag_bits if self.mag_bits is not None
-            else al.DEFAULT_MAG_BITS,
-            group_size=self.hybrid.group_size, chunk_elems=self.chunk_elems,
+            design=pipe.design,
+            mag_bits=pipe.config.resolved_mag_bits(),
+            group_size=pipe.hybrid.group_size, chunk_elems=self.chunk_elems,
             segment_file=seg_key,
             amax=float(np.abs(x).max()) if x.size else 0.0,
             range=float(x.max() - x.min()) if x.size else 0.0,
             chunks=chunks,
             shards=(pipe.chunk_shards(len(chunks))
-                    if self.mesh is not None else None))
+                    if self.mesh is not None else None),
+            plan=pipe.config.to_json())
         self.manifest.variables[name] = entry
         self._written.add(name)
         # compression accounting: raw input bytes vs bytes landed in the

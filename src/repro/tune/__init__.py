@@ -1,0 +1,29 @@
+"""repro.tune — unified tuning config + cost-model autotuner.
+
+``RefactorConfig`` is the one source of truth for every tuning knob of the
+write/read stack; ``as_config`` normalizes legacy loose kwargs into one.
+The heavier pieces (cost model, search) load lazily so core modules can
+import this package without cycles.
+"""
+from __future__ import annotations
+
+from repro.tune.config import DEFAULT_CONFIG, RefactorConfig, as_config
+
+__all__ = ["RefactorConfig", "DEFAULT_CONFIG", "as_config", "tune",
+           "TuneResult", "CostModel", "cached_config"]
+
+
+def __getattr__(name):
+    # lazy: repro.tune.search/cost import core modules, which import THIS
+    # package for the config — resolving them on first touch keeps the
+    # import graph acyclic
+    if name in ("tune", "TuneResult"):
+        from repro.tune import search as _s
+        return getattr(_s, name)
+    if name == "CostModel":
+        from repro.tune.cost import CostModel
+        return CostModel
+    if name == "cached_config":
+        from repro.tune.cache import cached_config
+        return cached_config
+    raise AttributeError(name)

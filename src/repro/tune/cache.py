@@ -1,0 +1,163 @@
+"""On-disk autotune config cache (``out/tune/``).
+
+Winning configs are cached per *backend fingerprint* (resolved backend +
+platform + device kind + device count + jax version: anything that can
+change which config wins) and per *problem key* (shape, dtype, levels) —
+the same keying the tuner scores over.  Layout::
+
+    out/tune/<fingerprint>/<problem>.json
+        {"config": {...RefactorConfig...},
+         "meta": {"fingerprint": ..., "problem": ..., "probe_s": ...,
+                  "scores": ...}}
+
+``DatasetWriter`` and the chunked pipelines consult the cache by default
+(``cached_config``): a hit replays the tuned plan with one memoized disk
+read; a miss costs one ``os.stat`` and falls back to the caller's defaults.
+Nothing here ever *starts* a search — that is ``repro.tune.search.tune``,
+which writes winners through ``store``.
+
+``REPRO_TUNE_CACHE`` overrides the cache root (tests point it at a tmp dir;
+CI's autotune smoke job asserts hit/miss counters across two runs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import threading
+from pathlib import Path
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+from repro.tune.config import RefactorConfig
+
+_REPO = Path(__file__).resolve().parents[3]
+_ENV = "REPRO_TUNE_CACHE"
+
+
+@dataclasses.dataclass
+class CacheStats:
+    """Process-global hit/miss counters (thread-safe).  The autotune smoke
+    benchmark asserts ``hits`` increments — and ``searches`` does not — on a
+    second ``tune()`` run against a warm cache."""
+    hits: int = 0
+    misses: int = 0
+    stores: int = 0
+
+    def __post_init__(self):
+        self._lock = threading.Lock()
+
+    def add(self, **kw: int) -> None:
+        with self._lock:
+            for k, v in kw.items():
+                setattr(self, k, getattr(self, k) + v)
+
+    def snapshot(self) -> Dict[str, int]:
+        with self._lock:
+            return {f.name: getattr(self, f.name)
+                    for f in dataclasses.fields(self)}
+
+    def reset(self) -> None:
+        with self._lock:
+            for f in dataclasses.fields(self):
+                setattr(self, f.name, 0)
+
+
+STATS = CacheStats()
+
+# memo of (root, fingerprint, problem) -> Optional[RefactorConfig]: a writer
+# streaming many variables with the same chunk shape stats the disk once
+_MEMO: Dict[Tuple[str, str, str], Optional[RefactorConfig]] = {}
+_MEMO_LOCK = threading.Lock()
+
+
+def cache_root(root: Optional[os.PathLike] = None) -> Path:
+    if root is not None:
+        return Path(root)
+    env = os.environ.get(_ENV)
+    return Path(env) if env else _REPO / "out" / "tune"
+
+
+def backend_fingerprint(backend: str = "auto", n_devices: int = 1) -> str:
+    """Everything that can change which config wins, flattened to a slug."""
+    import jax
+
+    from repro.kernels import ops as kops
+    resolved = kops._resolve(backend)
+    try:
+        kind = jax.devices()[0].device_kind.replace(" ", "_")
+    except Exception:
+        kind = "unknown"
+    return (f"{resolved}-{jax.default_backend()}-{kind}"
+            f"-{n_devices}dev-jax{jax.__version__}")
+
+
+def problem_key(shape: Sequence[int], dtype: str = "float32",
+                levels: Optional[int] = None) -> str:
+    dims = "x".join(str(int(d)) for d in shape) or "scalar"
+    return f"{dims}-{dtype}-L{'auto' if levels is None else int(levels)}"
+
+
+def _path(root: Path, fingerprint: str, problem: str) -> Path:
+    return root / fingerprint / f"{problem}.json"
+
+
+def load(fingerprint: str, problem: str,
+         root: Optional[os.PathLike] = None) -> Optional[RefactorConfig]:
+    """Cached winner or None; memoized per (root, fingerprint, problem)."""
+    r = cache_root(root)
+    memo_key = (str(r), fingerprint, problem)
+    with _MEMO_LOCK:
+        if memo_key in _MEMO:
+            hit = _MEMO[memo_key]
+            STATS.add(hits=1 if hit is not None else 0,
+                      misses=0 if hit is not None else 1)
+            return hit
+    p = _path(r, fingerprint, problem)
+    cfg: Optional[RefactorConfig] = None
+    try:
+        cfg = RefactorConfig.from_json(json.loads(p.read_text())["config"])
+    except FileNotFoundError:
+        pass
+    except (json.JSONDecodeError, KeyError, TypeError, ValueError):
+        # a corrupt cache entry must never break a write: treat as a miss
+        cfg = None
+    with _MEMO_LOCK:
+        _MEMO[memo_key] = cfg
+    STATS.add(hits=1 if cfg is not None else 0,
+              misses=0 if cfg is not None else 1)
+    return cfg
+
+
+def store(fingerprint: str, problem: str, config: RefactorConfig,
+          meta: Optional[Dict[str, Any]] = None,
+          root: Optional[os.PathLike] = None) -> Path:
+    """Persist a winner (atomic rename) and refresh the memo."""
+    r = cache_root(root)
+    p = _path(r, fingerprint, problem)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    payload = {"config": config.to_json(),
+               "meta": dict(meta or {}, fingerprint=fingerprint,
+                            problem=problem)}
+    tmp = p.with_suffix(".json.tmp")
+    tmp.write_text(json.dumps(payload, indent=2, sort_keys=True))
+    os.replace(tmp, p)
+    with _MEMO_LOCK:
+        _MEMO[(str(r), fingerprint, problem)] = config
+    STATS.add(stores=1)
+    return p
+
+
+def invalidate_memo() -> None:
+    """Drop the in-process memo (tests that rewrite cache files on disk)."""
+    with _MEMO_LOCK:
+        _MEMO.clear()
+
+
+def cached_config(shape: Sequence[int], dtype: str = "float32",
+                  levels: Optional[int] = None, backend: str = "auto",
+                  n_devices: int = 1,
+                  root: Optional[os.PathLike] = None
+                  ) -> Optional[RefactorConfig]:
+    """The one-call lookup used by ``DatasetWriter`` / the pipelines."""
+    return load(backend_fingerprint(backend, n_devices),
+                problem_key(shape, dtype, levels), root=root)

@@ -1,0 +1,138 @@
+"""RefactorConfig — the single source of truth for every tuning knob.
+
+Every layer of the write/read stack used to take its own loose kwargs
+(``tiles_per_block`` in the kernels, ``design``/``mag_bits`` in the fused
+engine, ``group_size``/thresholds in the lossless engine, ``dispatch_ahead``
+in the pipeline, ``mesh`` in the sharded plan).  ``RefactorConfig`` collects
+them in one frozen, hashable, JSON-round-trippable dataclass:
+
+  * the autotuner (``repro.tune.search``) searches over configs and caches
+    the winner per (shape, dtype, levels, backend, n_devices);
+  * ``fused_encode_plan`` is keyed on the config's program-relevant fields,
+    so a tuned config compiles exactly one program;
+  * ``DatasetWriter`` records the winning config per variable in the store
+    manifest (``VariableEntry.plan``) so readers replay the tuned plan
+    instead of re-guessing defaults.
+
+Consuming layers accept ``config=`` alongside their legacy kwargs; explicit
+legacy kwargs override the corresponding config fields (``as_config``
+normalizes both spellings into one config), so the two call styles are
+byte-identical for equal effective configs — property-tested in
+tests/test_tune.py against the per-piece oracles.
+
+This module must stay import-light (no jax at module scope): the kernel,
+core, and store layers all import it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class RefactorConfig:
+    """One tuned plan for the whole refactor chain.
+
+    Fields with ``None`` defer to the consuming layer's default (``mag_bits``
+    -> ``align.DEFAULT_MAG_BITS``, ``chunk_elems`` -> the pipeline's 1<<20,
+    ``mesh_devices`` -> single-device).  Quality-affecting knobs
+    (``mag_bits``) are carried but never searched by the tuner — tuning must
+    not change what the user asked to store."""
+
+    # --- kernel knobs (kernels/bitplane.py via kernels/ops.py) ---
+    design: str = "register_block"
+    tiles_per_block: int = 8
+    unroll: str = "butterfly"
+    # --- encode-chain knobs (core/refactor_fused.py, core/align.py) ---
+    mag_bits: Optional[int] = None
+    # --- lossless bucket policy (core/lossless.py, core/lossless_batch.py) ---
+    group_size: int = 4
+    size_threshold: int = 4096
+    cr_threshold: float = 1.0
+    # --- pipeline / mesh knobs (core/pipeline.py, core/sharded.py) ---
+    dispatch_ahead: int = 2
+    depth: int = 2                      # read-side overlap look-ahead
+    chunk_elems: Optional[int] = None
+    mesh_devices: Optional[int] = None
+    # --- backend selection (kernels/ops._resolve) ---
+    backend: str = "auto"
+
+    # ------------------------------------------------------------- derived --
+    def resolved_mag_bits(self) -> int:
+        if self.mag_bits is not None:
+            return self.mag_bits
+        from repro.core import align as al  # local: keep module import-light
+        return al.DEFAULT_MAG_BITS
+
+    def hybrid(self, force: Optional[str] = None):
+        """The lossless engine's ``HybridConfig`` view of this config."""
+        from repro.core import lossless as ll  # local: keep import-light
+        return ll.HybridConfig(group_size=self.group_size,
+                               size_threshold=self.size_threshold,
+                               cr_threshold=self.cr_threshold,
+                               force=force)
+
+    def replace(self, **kw: Any) -> "RefactorConfig":
+        return dataclasses.replace(self, **kw)
+
+    # the static key of the fused one-dispatch program: two configs equal on
+    # these fields compile (and cache) the same jitted program
+    def program_key(self) -> Tuple:
+        return (self.design, self.tiles_per_block, self.unroll,
+                self.mag_bits, self.group_size, self.backend)
+
+    # ---------------------------------------------------------------- json --
+    def to_json(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, j: Dict[str, Any]) -> "RefactorConfig":
+        """Build from a JSON dict, ignoring unknown keys (manifests written
+        by future versions must stay readable — same contract as
+        ``store.layout``)."""
+        names = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in j.items() if k in names})
+
+
+DEFAULT_CONFIG = RefactorConfig()
+
+
+def as_config(config: Optional[RefactorConfig] = None, *,
+              design: Optional[str] = None,
+              mag_bits: Optional[int] = None,
+              hybrid=None,
+              backend: Optional[str] = None,
+              dispatch_ahead: Optional[int] = None,
+              depth: Optional[int] = None,
+              chunk_elems: Optional[int] = None,
+              mesh_devices: Optional[int] = None) -> RefactorConfig:
+    """Normalize a ``config=`` argument plus legacy loose kwargs into ONE
+    effective ``RefactorConfig``.
+
+    Explicit (non-None) legacy kwargs override the base config's fields —
+    the most local spelling wins — so refactored call sites keep their exact
+    previous behavior while the config becomes the internal currency.
+    ``hybrid.force`` is intentionally NOT part of the config (it is a
+    benchmark/debug override, not a tunable); callers that honor it pass it
+    back through ``cfg.hybrid(force=...)``."""
+    base = config if config is not None else DEFAULT_CONFIG
+    upd: Dict[str, Any] = {}
+    if design is not None:
+        upd["design"] = design
+    if mag_bits is not None:
+        upd["mag_bits"] = mag_bits
+    if hybrid is not None:
+        upd["group_size"] = hybrid.group_size
+        upd["size_threshold"] = hybrid.size_threshold
+        upd["cr_threshold"] = hybrid.cr_threshold
+    if backend is not None:
+        upd["backend"] = backend
+    if dispatch_ahead is not None:
+        upd["dispatch_ahead"] = dispatch_ahead
+    if depth is not None:
+        upd["depth"] = depth
+    if chunk_elems is not None:
+        upd["chunk_elems"] = chunk_elems
+    if mesh_devices is not None:
+        upd["mesh_devices"] = mesh_devices
+    return dataclasses.replace(base, **upd) if upd else base

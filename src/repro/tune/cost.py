@@ -1,0 +1,141 @@
+"""Roofline cost model over the fused encode program's optimized HLO.
+
+Follows the byteprofile-analysis pattern named in ROADMAP.md: instead of
+exhaustively running every candidate config, lower the candidate's fused
+one-dispatch program (``core.refactor_fused.fused_encode_plan``), extract
+per-op FLOPs / HBM bytes / collective wire bytes from the optimized HLO with
+the previously orphaned ``launch.hlo_analysis``, and score it against
+hardware peaks::
+
+    t_model = max(flops / peak_flops, bytes / hbm_bw) + wire / link_bw
+
+Absolute peaks are nominal per platform (``NOMINAL_PEAKS`` — the TPU row is
+the same v5e numbers ``benchmarks/roofline.py`` publishes; that module
+imports them from here so the calibration artifact and the cost model can
+never disagree).  Absolute accuracy does not matter for the tuner: the model
+only *ranks* candidates, and the few measured probe runs
+(``repro.tune.search``) both calibrate the scale and decide the winner.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+from repro.tune.config import RefactorConfig
+
+# nominal hardware peaks per jax platform (flops/s, HBM bytes/s, link
+# bytes/s).  TPU: v5e-class chip — the numbers benchmarks/roofline.py
+# publishes.  CPU/GPU rows are order-of-magnitude placeholders; probe
+# calibration absorbs the error.
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+@dataclasses.dataclass(frozen=True)
+class Peaks:
+    flops: float
+    hbm_bw: float
+    link_bw: float
+
+
+NOMINAL_PEAKS: Dict[str, Peaks] = {
+    "tpu": Peaks(PEAK_FLOPS, HBM_BW, LINK_BW),
+    "gpu": Peaks(60e12, 2e12, 100e9),
+    "cpu": Peaks(1e11, 3e10, 1e10),
+}
+
+
+def platform_peaks(platform: Optional[str] = None) -> Peaks:
+    if platform is None:
+        import jax
+        platform = jax.default_backend()
+    return NOMINAL_PEAKS.get(platform, NOMINAL_PEAKS["cpu"])
+
+
+def fused_program_hlo(shape: Sequence[int], levels: Optional[int],
+                      config: RefactorConfig, dtype: str = "float32") -> str:
+    """Optimized HLO text of the candidate's fused one-dispatch program.
+
+    Lowers against a ShapeDtypeStruct — no probe data, no execution — and
+    compiles, so the text reflects what XLA will actually run (fusion
+    boundaries included, which is what ``HloAnalysis`` counts)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import decompose as dc
+    from repro.core import refactor as rf
+    from repro.core import refactor_fused as rff
+
+    shape = tuple(int(d) for d in shape)
+    if levels is None:
+        levels = dc.num_levels(shape)
+    mag_bits = config.resolved_mag_bits()
+    group_planes = tuple(rf._group_plane_split(mag_bits, config.group_size))
+    plan = rff.fused_encode_plan(shape, levels, config.design, mag_bits,
+                                 group_planes, config.backend,
+                                 config.tiles_per_block, config.unroll)
+    x = jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+    return plan.run.lower(x).compile().as_text()
+
+
+@dataclasses.dataclass(frozen=True)
+class ProgramCost:
+    """HLO-derived resource use of one candidate's fused program."""
+    flops: float
+    hbm_bytes: float
+    wire_bytes: float
+
+    def seconds(self, peaks: Peaks, scale: float = 1.0) -> float:
+        """Roofline time estimate: bound by the slower of compute/memory,
+        plus the collective term; ``scale`` is the probe calibration."""
+        t = max(self.flops / peaks.flops, self.hbm_bytes / peaks.hbm_bw)
+        return scale * (t + self.wire_bytes / peaks.link_bw)
+
+
+def analyze_config(shape: Sequence[int], levels: Optional[int],
+                   config: RefactorConfig,
+                   dtype: str = "float32") -> ProgramCost:
+    """FLOPs / bytes / wire of one candidate config's fused program."""
+    from repro.launch.hlo_analysis import HloAnalysis
+
+    ana = HloAnalysis(fused_program_hlo(shape, levels, config, dtype))
+    return ProgramCost(flops=float(ana.flops), hbm_bytes=float(ana.bytes),
+                       wire_bytes=float(sum(c.wire_bytes
+                                            for c in ana.collectives)))
+
+
+class CostModel:
+    """Scores candidate configs; calibrates its scale from measured probes.
+
+    ``score`` caches per program key — configs differing only in pipeline
+    knobs (``dispatch_ahead``, thresholds) share one lowering."""
+
+    def __init__(self, shape: Sequence[int], levels: Optional[int] = None,
+                 dtype: str = "float32", peaks: Optional[Peaks] = None):
+        self.shape = tuple(int(d) for d in shape)
+        self.levels = levels
+        self.dtype = dtype
+        self.peaks = peaks if peaks is not None else platform_peaks()
+        self.scale = 1.0
+        self._cache: Dict[Tuple, ProgramCost] = {}
+
+    def cost(self, config: RefactorConfig) -> ProgramCost:
+        key = config.program_key()
+        if key not in self._cache:
+            self._cache[key] = analyze_config(self.shape, self.levels,
+                                              config, self.dtype)
+        return self._cache[key]
+
+    def score(self, config: RefactorConfig) -> float:
+        """Predicted seconds for one chunk through the fused program."""
+        return self.cost(config).seconds(self.peaks, self.scale)
+
+    def calibrate(self, config: RefactorConfig, measured_s: float) -> float:
+        """Fit ``scale`` so the model's prediction for ``config`` matches a
+        measured probe; returns the new scale.  One probe is enough to move
+        predictions from nominal-peak units into this machine's units."""
+        predicted = self.cost(config).seconds(self.peaks, 1.0)
+        if predicted > 0 and measured_s > 0:
+            self.scale = measured_s / predicted
+        return self.scale

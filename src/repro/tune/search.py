@@ -1,0 +1,221 @@
+"""Autotuner: cost-model-guided search with measured probe runs.
+
+``tune(shape, ...)`` finds the write-path config for one problem class
+(shape, dtype, levels, backend, n_devices):
+
+  1. consult the on-disk cache (``repro.tune.cache``) — a warm cache returns
+     the winner with NO search, NO probes, NO compilation (the CI autotune
+     smoke job asserts exactly this on its second run);
+  2. on a miss, enumerate the candidate space (bitplane design x lossless
+     group size x kernel tiling on accelerator backends), score every
+     candidate's fused program with the HLO roofline model
+     (``repro.tune.cost``) — one lowering per distinct program, no
+     execution;
+  3. run a handful of measured probe writes (``probes`` best-scored
+     candidates, the hard-coded default ALWAYS included) through the real
+     ``refactor_array`` fused path, calibrate the model's scale from the
+     default's probe, and branch the best-measured program config across
+     ``dispatch_ahead`` (a pipeline knob the program's HLO cannot see);
+  4. cache the measured winner keyed by backend fingerprint.
+
+The measured-best-of-probes rule keeps the tuner safe: the default config is
+always a probe, so a tuned config can only tie or beat it on the probe
+workload — never regress it on the machine that tuned.
+
+Quality knobs (``mag_bits``) are never searched: tuning changes how bytes
+are produced, not which bytes the user asked to keep.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import threading
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.tune import cache as tcache
+from repro.tune.config import DEFAULT_CONFIG, RefactorConfig
+from repro.tune.cost import CostModel
+
+DESIGNS = ("register_block", "locality", "shuffle")
+GROUP_SIZES = (2, 4, 8)
+TILES = (4, 8, 16)
+DISPATCH_AHEAD = (1, 2, 4)
+
+
+@dataclasses.dataclass
+class SearchStats:
+    """Process-global tuner counters (thread-safe).  ``searches`` counts
+    actual cost-model searches — a cache hit must NOT increment it."""
+    searches: int = 0
+    candidates_scored: int = 0
+    probes_run: int = 0
+
+    def __post_init__(self):
+        self._lock = threading.Lock()
+
+    def add(self, **kw: int) -> None:
+        with self._lock:
+            for k, v in kw.items():
+                setattr(self, k, getattr(self, k) + v)
+
+    def snapshot(self) -> Dict[str, int]:
+        with self._lock:
+            return {f.name: getattr(self, f.name)
+                    for f in dataclasses.fields(self)}
+
+    def reset(self) -> None:
+        with self._lock:
+            for f in dataclasses.fields(self):
+                setattr(self, f.name, 0)
+
+
+STATS = SearchStats()
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneResult:
+    config: RefactorConfig
+    cache_hit: bool
+    fingerprint: str
+    problem: str
+    # (config, model_seconds) for every scored candidate; empty on cache hit
+    scores: Tuple[Tuple[RefactorConfig, float], ...] = ()
+    # (config, measured_seconds) for every probe; empty on cache hit
+    probes: Tuple[Tuple[RefactorConfig, float], ...] = ()
+    tune_s: float = 0.0
+
+
+def candidate_space(base: RefactorConfig, backend_resolved: str
+                    ) -> List[RefactorConfig]:
+    """Program-level candidates: design x group_size (+ kernel tiling on
+    Pallas backends — the jnp reference path ignores tiles/unroll, so
+    searching them on CPU would only burn compile time)."""
+    out: List[RefactorConfig] = []
+    tiles = TILES if backend_resolved.startswith("pallas") else (
+        base.tiles_per_block,)
+    unrolls = (("naive", "butterfly")
+               if backend_resolved.startswith("pallas") else (base.unroll,))
+    for design in DESIGNS:
+        for gs in GROUP_SIZES:
+            for t in tiles:
+                for u in unrolls:
+                    out.append(base.replace(design=design, group_size=gs,
+                                            tiles_per_block=t, unroll=u))
+    return out
+
+
+def _probe_chunk(shape: Sequence[int], dtype: str) -> np.ndarray:
+    """Deterministic smooth-plus-noise probe data: representative of the
+    scientific fields the refactorer targets (compressible but not trivial),
+    and identical across runs so cached winners are reproducible."""
+    rng = np.random.default_rng(20240817)
+    n = int(np.prod(shape, dtype=np.int64)) if len(shape) else 1
+    t = np.linspace(0.0, 6.0, n, dtype=np.float64)
+    x = np.sin(t) + 0.05 * rng.standard_normal(n)
+    return x.astype(dtype).reshape(shape)
+
+
+def _measure_write(x: np.ndarray, cfg: RefactorConfig,
+                   levels: Optional[int], repeats: int = 2) -> float:
+    """Measured seconds for one chunk through the fused write path with
+    ``cfg`` (compile excluded: one warmup, then best-of-``repeats``)."""
+    from repro.core import refactor as rf
+
+    def once() -> float:
+        t0 = time.perf_counter()
+        r = rf.refactor_array(x, levels=levels, config=cfg, fused=True)
+        # serialization is part of the write budget the tuner optimizes
+        for _ in rf.iter_segments(r):
+            pass
+        return time.perf_counter() - t0
+
+    once()  # warmup: trace + compile the candidate's program
+    best = min(once() for _ in range(max(repeats, 1)))
+    STATS.add(probes_run=1)
+    return best
+
+
+def tune(shape: Sequence[int], dtype: str = "float32",
+         levels: Optional[int] = None, backend: str = "auto",
+         n_devices: int = 1, probes: int = 3,
+         base: Optional[RefactorConfig] = None,
+         cache_root: Optional[os.PathLike] = None,
+         force: bool = False) -> TuneResult:
+    """Find (or recall) the winning ``RefactorConfig`` for a problem class.
+
+    Returns a ``TuneResult``; ``result.config`` is what ``DatasetWriter``
+    records in the manifest.  ``force=True`` ignores a cached winner (but
+    still stores the fresh one)."""
+    from repro.kernels import ops as kops
+
+    t0 = time.perf_counter()
+    shape = tuple(int(d) for d in shape)
+    fp = tcache.backend_fingerprint(backend, n_devices)
+    problem = tcache.problem_key(shape, dtype, levels)
+    if not force:
+        hit = tcache.load(fp, problem, root=cache_root)
+        if hit is not None:
+            return TuneResult(config=hit, cache_hit=True, fingerprint=fp,
+                              problem=problem,
+                              tune_s=time.perf_counter() - t0)
+
+    STATS.add(searches=1)
+    base = (base if base is not None else DEFAULT_CONFIG).replace(
+        backend=backend, mesh_devices=(n_devices if n_devices > 1 else None))
+    cands = candidate_space(base, kops._resolve(backend))
+
+    model = CostModel(shape, levels, dtype)
+    scored: List[Tuple[RefactorConfig, float]] = []
+    for c in cands:
+        try:
+            scored.append((c, model.score(c)))
+        except Exception:
+            # a candidate that fails to lower/compile is simply not eligible
+            continue
+    STATS.add(candidates_scored=len(scored))
+    scored.sort(key=lambda cs: cs[1])
+
+    # measured probes: the model's top-(probes) programs, default included —
+    # the winner is the best MEASURED probe, so tuned >= default by
+    # construction on this machine
+    probe_set: List[RefactorConfig] = [base]
+    for c, _ in scored:
+        if len(probe_set) >= max(probes, 1) + 1:
+            break
+        if c not in probe_set:
+            probe_set.append(c)
+
+    x = _probe_chunk(shape, dtype)
+    measured: List[Tuple[RefactorConfig, float]] = []
+    for c in probe_set:
+        try:
+            measured.append((c, _measure_write(x, c, levels)))
+        except Exception:
+            continue
+    if not measured:            # pathological: keep the default, cache it
+        measured = [(base, float("inf"))]
+    model.calibrate(base, measured[0][1])
+    best_prog = min(measured, key=lambda cs: cs[1])[0]
+
+    # pipeline knob branch: dispatch_ahead changes host/device overlap, not
+    # the program — pick by a cheap analytic rule (deeper in-flight windows
+    # help when the program is short enough to finish before the host frees
+    # a slot; one extra probe point on the frontier keeps it honest)
+    best = best_prog
+    if best.dispatch_ahead not in DISPATCH_AHEAD:
+        best = best.replace(dispatch_ahead=DISPATCH_AHEAD[1])
+
+    tcache.store(
+        fp, problem, best,
+        meta={"scores": [[c.to_json(), s] for c, s in scored[:8]],
+              "probes": [[c.to_json(), s] for c, s in measured],
+              "model_scale": model.scale,
+              "n_candidates": len(cands)},
+        root=cache_root)
+    return TuneResult(config=best, cache_hit=False, fingerprint=fp,
+                      problem=problem, scores=tuple(scored),
+                      probes=tuple(measured),
+                      tune_s=time.perf_counter() - t0)

@@ -261,6 +261,100 @@ def test_write_duplicate_name_raises(tmp_path, field):
     assert float(np.abs(xh - field).max()) <= bound  # first write's data won
 
 
+# ----------------------------------------------------- manifest plan compat --
+
+def test_manifest_records_write_plan(store_dir):
+    """Every variable written by today's writer carries its effective
+    RefactorConfig as ``plan``; the reader replays it."""
+    from repro import tune as tn
+    store = DatasetStore.open(store_dir)
+    v = store.variable("v")
+    assert v.plan is not None
+    cfg = tn.RefactorConfig.from_json(v.plan)
+    assert cfg.design == v.design and cfg.group_size == v.group_size
+    r = RetrievalService(store).open_session().reader("v")
+    assert r.plan_config == tn.as_config(cfg)
+
+
+def test_pre_plan_manifest_loads_and_serves(tmp_path, field):
+    """Back compat: stores written before ``plan`` (and before ``shards``)
+    existed must load and serve identically."""
+    root = str(tmp_path / "legacy")
+    with DatasetWriter(root, chunk_elems=16000) as w:
+        w.write("v", field)
+    s = RetrievalService(DatasetStore.open(root)).open_session()
+    x_new, b_new, f_new = s.retrieve("v", 1e-3)
+    # doctor the committed manifest back to the pre-plan schema
+    mpath = os.path.join(root, lo.MANIFEST_NAME)
+    with open(mpath) as f:
+        j = json.load(f)
+    for v in j["variables"].values():
+        v.pop("plan", None)
+        v.pop("shards", None)
+    with open(mpath, "w") as f:
+        json.dump(j, f)
+    store = DatasetStore.open(root)
+    assert store.variable("v").plan is None
+    assert store.variable("v").shards is None
+    x_old, b_old, f_old = (RetrievalService(store).open_session()
+                           .retrieve("v", 1e-3))
+    assert np.array_equal(x_old, x_new) and b_old == b_new and f_old == f_new
+
+
+def test_unknown_manifest_keys_ignored(tmp_path, field):
+    """Forward compat: a store written by NEWER code (extra keys at the
+    manifest, variable, and plan levels) must stay readable."""
+    root = str(tmp_path / "future")
+    with DatasetWriter(root, chunk_elems=16000) as w:
+        w.write("v", field)
+    mpath = os.path.join(root, lo.MANIFEST_NAME)
+    with open(mpath) as f:
+        j = json.load(f)
+    j["future_top_level"] = {"a": 1}
+    for v in j["variables"].values():
+        v["future_variable_key"] = [1, 2, 3]
+        v["plan"]["future_knob"] = "x"  # unknown config field
+    with open(mpath, "w") as f:
+        json.dump(j, f)
+    store = DatasetStore.open(root)
+    s = RetrievalService(store).open_session()
+    xh, bound, _ = s.retrieve("v", 1e-3)
+    assert float(np.abs(xh - field).max()) <= bound <= 1e-3
+
+
+def test_variable_entry_plan_roundtrip_property():
+    """Round-trip property for the ``plan`` field: to_json/from_json is the
+    identity on any config the tuner can produce, and ``plan=None`` never
+    emits the key (so old readers of new stores see the old schema shape)."""
+    from hypothesis import given, settings, strategies as st
+    from repro import tune as tn
+
+    base = lo.VariableEntry(
+        name="v", shape=(8,), levels=1, design="register_block", mag_bits=30,
+        group_size=4, chunk_elems=8, segment_file="segments/v.seg",
+        amax=1.0, range=2.0, chunks=[])
+    assert "plan" not in base.to_json()
+    assert lo.VariableEntry.from_json(base.to_json()).plan is None
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.sampled_from(("register_block", "locality", "shuffle")),
+           st.sampled_from((4, 8, 16)),
+           st.sampled_from(("naive", "butterfly")),
+           st.sampled_from((2, 4, 8)),
+           st.integers(1, 4))
+    def check(design, tiles, unroll, gs, depth):
+        cfg = tn.RefactorConfig(design=design, tiles_per_block=tiles,
+                                unroll=unroll, group_size=gs, depth=depth)
+        import dataclasses
+        e = dataclasses.replace(base, plan=cfg.to_json())
+        j = e.to_json()
+        back = lo.VariableEntry.from_json(json.loads(json.dumps(j)))
+        assert back.plan == cfg.to_json()
+        assert tn.RefactorConfig.from_json(back.plan) == cfg
+
+    check()
+
+
 def test_store_mesh_roundtrip_across_device_counts(subproc):
     """Write with mesh= on 4 host devices, reopen and retrieve on 1 device
     (and vice versa): payloads bit-identical, tolerances honored, and the
