@@ -28,6 +28,13 @@ def run(shape=(96, 96, 96), chunk=1 << 17) -> list:
     results = {}
     out_json = {"shape": list(shape), "chunk_elems": chunk}
     n_chunks = -(-x.size // chunk)
+    # gate stability: the serial/pipelined ratio gates CI (>= 0.85), and a
+    # single cold trial has swung it 0.95x..1.28x between runs on the shared
+    # 1-core host.  Each mode therefore gets (a) one explicit jit-cache warm
+    # run, (b) `warmup` further timed-loop warmups that absorb allocator and
+    # page-cache effects, and (c) median-of-`iters` trials (timeit reports
+    # the median, which ignores one slow outlier per tail).
+    warmup, iters = 1, 5
     for pipelined in [False, True]:
         name = "pipelined" if pipelined else "serial"
         # warm the jit caches once (refactor AND reconstruct paths)
@@ -43,12 +50,13 @@ def run(shape=(96, 96, 96), chunk=1 << 17) -> list:
             r.reconstruct(blobs, tol=1e-4)
             return p, r
 
-        iters = 2
         lb.STATS.reset()
-        t = timeit(go, warmup=0, iters=iters)
-        # counters accumulated over `iters` identical runs -> report per-call
-        # (exact: the chunking and codec decisions are deterministic)
-        codec = {k: v // iters for k, v in lb.STATS.snapshot().items()}
+        t = timeit(go, warmup=warmup, iters=iters)
+        # counters accumulated over all warmup+iters identical runs ->
+        # report per-call (exact: the chunking and codec decisions are
+        # deterministic)
+        runs = warmup + iters
+        codec = {k: v // runs for k, v in lb.STATS.snapshot().items()}
         results[name] = t
         out_json[name] = {"s": t, "gbps": x.nbytes / 1e9 / t,
                           "chunks": n_chunks, "codec": codec}

@@ -58,6 +58,18 @@ def build_codebook(hist: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
     """Canonical, length-limited Huffman codebook from a 256-bin histogram.
 
     Returns (lengths uint8[256], codes uint32[256]); absent symbols get len 0.
+
+    Two-queue Huffman (one sort, then O(n) merges) instead of a heap — the
+    codebook build sits on the per-chunk write path (one per huffman group),
+    and the heap formulation was the single hottest host-side item there.
+    Output is bit-identical to ``_build_codebook_ref`` (the retired heap
+    build, kept as the property-test oracle): the heap pops min ``(freq,
+    idx)`` where leaves carry idx < 256 and internal nodes idx >= 256 in
+    creation order, so a freq tie always resolves leaf-first and, between
+    internal nodes, in FIFO creation order — exactly what popping from a
+    (freq, symbol)-sorted leaf queue and a FIFO internal queue reproduces
+    (internal freqs are non-decreasing in creation order, the classic
+    two-queue invariant).
     """
     hist = np.asarray(hist, dtype=np.int64)
     present = np.nonzero(hist)[0]
@@ -67,7 +79,83 @@ def build_codebook(hist: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
     if len(present) == 1:
         lengths[present[0]] = 1
     else:
-        # standard heap-built tree -> depths
+        freqs = hist[present]
+        order = np.argsort(freqs, kind="stable")  # (freq, symbol) ascending
+        lf = freqs[order].tolist()
+        n_leaves = len(lf)
+        leaf_sym = present[order].tolist()
+        qf: List[int] = []          # internal-node freqs (non-decreasing)
+        kids: List[Tuple[int, int]] = []
+        li = qi = nq = 0
+        # inlined two-queue pops (this loop runs ~2x255 times per group on
+        # the write hot path): node id is the leaf symbol (< 256) or 256 +
+        # internal creation index; <= prefers the leaf on a freq tie (leaf
+        # id < internal id, matching the heap's (freq, idx) order)
+        for _ in range(n_leaves - 1):
+            if qi >= nq or (li < n_leaves and lf[li] <= qf[qi]):
+                f1, i1 = lf[li], leaf_sym[li]; li += 1
+            else:
+                f1, i1 = qf[qi], 256 + qi; qi += 1
+            if qi >= nq or (li < n_leaves and lf[li] <= qf[qi]):
+                f2, i2 = lf[li], leaf_sym[li]; li += 1
+            else:
+                f2, i2 = qf[qi], 256 + qi; qi += 1
+            qf.append(f1 + f2)
+            kids.append((i1, i2))
+            nq += 1
+        # depths top-down: children are created strictly before their parent,
+        # so a reverse pass sees every parent's depth before its children's
+        depth = [0] * len(kids)
+        for k in range(len(kids) - 1, -1, -1):
+            d = depth[k] + 1
+            for c in kids[k]:
+                if c < 256:
+                    lengths[c] = d
+                else:
+                    depth[c - 256] = d
+        # length-limit + Kraft fixup
+        lengths[present] = np.minimum(lengths[present], MAX_CODE_LEN)
+        def kraft() -> int:
+            return int(np.sum(1 << (MAX_CODE_LEN - lengths[present].astype(np.int64))))
+        cap = 1 << MAX_CODE_LEN
+        while kraft() > cap:
+            # lengthen the currently-longest shortenable code (min freq impact)
+            cand = present[lengths[present] < MAX_CODE_LEN]
+            i = cand[np.argmax(lengths[cand])]
+            lengths[i] += 1
+    # canonical code assignment in (length, symbol) order, vectorized via the
+    # standard next_code recurrence: code(s) = next_code[len(s)] + rank of s
+    # among same-length symbols — identical to the sequential shift-and-
+    # increment walk (``_build_codebook_ref``)
+    codes = np.zeros(256, dtype=np.uint32)
+    plens = lengths[present].astype(np.int64)
+    bl_count = np.bincount(plens, minlength=MAX_CODE_LEN + 1)
+    next_code = np.zeros(MAX_CODE_LEN + 1, dtype=np.int64)
+    code = 0
+    for l in range(1, MAX_CODE_LEN + 1):
+        code = (code + int(bl_count[l - 1])) << 1
+        next_code[l] = code
+    corder = np.argsort(plens, kind="stable")  # present ascending -> (len, sym)
+    sl = plens[corder]
+    rank = np.arange(len(sl)) - np.searchsorted(sl, sl)
+    codes[present[corder]] = (next_code[sl] + rank).astype(np.uint32)
+    return lengths, codes
+
+
+def _build_codebook_ref(hist: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Reference heap-built codebook (the pre-optimization implementation).
+
+    Kept ONLY as the property-test oracle for ``build_codebook``: the stored
+    format depends on the exact code lengths, so the fast build must stay
+    bit-identical to this forever."""
+    hist = np.asarray(hist, dtype=np.int64)
+    present = np.nonzero(hist)[0]
+    lengths = np.zeros(256, dtype=np.uint8)
+    if len(present) == 0:
+        return lengths, np.zeros(256, dtype=np.uint32)
+    if len(present) == 1:
+        lengths[present[0]] = 1
+    else:
         heap = [(int(hist[s]), int(s), None) for s in present]
         counter = 256
         heapq.heapify(heap)
@@ -88,17 +176,14 @@ def build_codebook(hist: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
                 l, r = parents[node]
                 stack.append((l, d + 1))
                 stack.append((r, d + 1))
-        # length-limit + Kraft fixup
         lengths[present] = np.minimum(lengths[present], MAX_CODE_LEN)
         def kraft() -> int:
             return int(np.sum(1 << (MAX_CODE_LEN - lengths[present].astype(np.int64))))
         cap = 1 << MAX_CODE_LEN
         while kraft() > cap:
-            # lengthen the currently-longest shortenable code (min freq impact)
             cand = present[lengths[present] < MAX_CODE_LEN]
             i = cand[np.argmax(lengths[cand])]
             lengths[i] += 1
-    # canonical code assignment: sort by (length, symbol)
     codes = np.zeros(256, dtype=np.uint32)
     order = sorted(present, key=lambda s: (lengths[s], s))
     code = 0

@@ -195,6 +195,26 @@ def _group_stats_batch(syms: jax.Array):
     return hists, nruns
 
 
+def _group_stats_host(rows: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Host twin of ``_group_stats_batch`` for the CPU backend: one
+    ``np.bincount`` over offset-shifted symbols computes every row's 256-bin
+    histogram, and the run-break rule matches ``lossless._rle_scan`` exactly
+    (neighbor change or forced break every RLE_BREAK symbols).
+
+    On the CPU backend the rows already live in host memory, so syncing the
+    raw bytes and histogramming here beats the XLA sort-based histogram
+    kernel by ~10x at chunk scale — equality with the device kernel is
+    pinned in tests/test_lossless_batch.py."""
+    B, S = rows.shape
+    offs = (np.arange(B, dtype=np.int64) * 256)[:, None]
+    hists = np.bincount((rows + offs).reshape(-1), minlength=B * 256)
+    hists = hists.reshape(B, 256).astype(np.int32)
+    brk = rows[:, 1:] != rows[:, :-1]
+    forced = (np.arange(1, S) % ll.RLE_BREAK) == 0
+    nruns = 1 + np.sum(brk | forced[None, :], axis=1, dtype=np.int32)
+    return hists, nruns
+
+
 # The batch pack/scan kernels ARE the reference per-group kernels, vmapped
 # over a same-size bucket — bit-identity with the per-group encoders holds
 # by construction, row for row.
@@ -278,6 +298,38 @@ def _select(size: int, hist: np.ndarray, n_runs: int, cfg: ll.HybridConfig
     return "dc", None
 
 
+def _host_rows() -> bool:
+    """True when every device is a host-memory device (CPU backend): rows
+    committed to ANY mesh device are plain host bytes, so the encoder can
+    gather them with numpy (zero-copy views, no XLA launch) and merge
+    buckets ACROSS devices — one wide kernel batch per group size instead
+    of one narrow batch per (size, device).  On accelerators a cross-device
+    gather would ship payloads over the link, so there buckets stay
+    device-keyed and every kernel runs where its rows live."""
+    return jax.default_backend() == "cpu"
+
+
+def _dev_key(a) -> object:
+    """Bucket-key component for the device an array is committed to.
+
+    The batched encoder may see rows from chunks pinned to different mesh
+    devices in ONE call (``refactor_fused.finish_encode_many`` drains a
+    whole in-flight window); stacking across devices is illegal in jax, so
+    — exactly like the read side's ``reconstruct.batch_apply_pending`` —
+    encode buckets never mix devices: each device's rows batch separately
+    and every kernel runs where its rows live.  Host / uncommitted arrays
+    key as ``None``."""
+    devs = getattr(a, "devices", None)
+    if callable(devs):
+        try:
+            devs = devs()
+        except Exception:  # pragma: no cover - tracer/abstract arrays
+            return None
+        if devs:
+            return tuple(sorted(d.id for d in devs))
+    return None
+
+
 def encode_groups(blobs: Sequence[jax.Array],
                   cfg: ll.HybridConfig = ll.HybridConfig()
                   ) -> List[ll.Segment]:
@@ -300,22 +352,30 @@ def encode_groups(blobs: Sequence[jax.Array],
         ll._check_group_size(s)  # before any upload/dispatch
     STATS.add(encode_calls=1, groups_encoded=len(blobs))
 
+    host = _host_rows()
     segs: List[Optional[ll.Segment]] = [None] * len(blobs)
-    buckets: Dict[int, List[int]] = {}
+    buckets: Dict[tuple, List[int]] = {}
     for i, s in enumerate(sizes):
         if s == 0:
             # empty groups never touch the device; compress_group reproduces
             # the per-group encoder (incl. force modes) exactly
             segs[i] = ll.compress_group(np.zeros(0, np.uint8), cfg)
         else:
-            buckets.setdefault(s, []).append(i)
+            buckets.setdefault((s, None if host else _dev_key(blobs[i])),
+                               []).append(i)
     if not buckets:
         return segs
 
-    stacked = {
-        s: jnp.stack([jnp.asarray(blobs[i], dtype=jnp.uint8).reshape(-1)
-                      for i in idxs])
-        for s, idxs in buckets.items()}
+    if host:
+        stacked = {
+            k: np.stack([np.asarray(blobs[i], dtype=np.uint8).reshape(-1)
+                         for i in idxs])
+            for k, idxs in buckets.items()}
+    else:
+        stacked = {
+            k: jnp.stack([jnp.asarray(blobs[i], dtype=jnp.uint8).reshape(-1)
+                          for i in idxs])
+            for k, idxs in buckets.items()}
     _encode_buckets(stacked, buckets, segs, cfg)
     return segs
 
@@ -344,9 +404,10 @@ def encode_groups_stacked(stacks: Sequence[jax.Array],
         return []
     STATS.add(encode_calls=1, groups_encoded=len(sizes))
 
+    host = _host_rows()
     segs: List[Optional[ll.Segment]] = [None] * len(sizes)
-    buckets: Dict[int, List[int]] = {}
-    parts: Dict[int, List[jax.Array]] = {}
+    buckets: Dict[tuple, List[int]] = {}
+    parts: Dict[tuple, List] = {}
     base = 0
     for st in stacks:
         b, s = int(st.shape[0]), int(st.shape[1])
@@ -354,37 +415,70 @@ def encode_groups_stacked(stacks: Sequence[jax.Array],
             for i in range(base, base + b):
                 segs[i] = ll.compress_group(np.zeros(0, np.uint8), cfg)
         else:
-            buckets.setdefault(s, []).extend(range(base, base + b))
-            parts.setdefault(s, []).append(jnp.asarray(st, jnp.uint8))
+            # host rows (CPU backend): numpy view, merge across devices —
+            # a multi-chunk window spanning the whole mesh becomes ONE wide
+            # bucket per size, not n_devices narrow ones (see _host_rows)
+            k = (s, None if host else _dev_key(st))
+            buckets.setdefault(k, []).extend(range(base, base + b))
+            parts.setdefault(k, []).append(
+                np.asarray(st, np.uint8) if host else jnp.asarray(st,
+                                                                  jnp.uint8))
         base += b
     if not buckets:
         return segs
 
-    stacked = {s: (p[0] if len(p) == 1 else jnp.concatenate(p))
-               for s, p in parts.items()}
+    cat = np.concatenate if host else jnp.concatenate
+    stacked = {k: (p[0] if len(p) == 1 else cat(p))
+               for k, p in parts.items()}
     _encode_buckets(stacked, buckets, segs, cfg)
     return segs
 
 
-def _encode_buckets(stacked: Dict[int, jax.Array],
-                    buckets: Dict[int, List[int]],
+def _encode_buckets(stacked: Dict[tuple, jax.Array],
+                    buckets: Dict[tuple, List[int]],
                     segs: List[Optional[ll.Segment]],
                     cfg: ll.HybridConfig) -> None:
-    """Shared stages 1-3 of the batched encoder: device stats (sync #1),
-    host-side Algorithm-2 selection, vmapped pack/scan (sync #2).  Fills
-    ``segs`` at the indices listed in ``buckets``."""
-    # stage 1: all histograms + run counts, one launch per bucket, ONE sync
-    stats_dev = {}
-    for s, st in stacked.items():
-        STATS.add(hist_batches=1)
-        stats_dev[s] = _group_stats_batch(st)
-    stats_host = host_sync(stats_dev, label="codec.stats")
+    """Shared stages 1-3 of the batched encoder: stats (sync #1), host-side
+    Algorithm-2 selection, vmapped pack/scan (sync #2).  Fills ``segs`` at
+    the indices listed in ``buckets``.  Bucket keys are ``(group_size,
+    device)`` — a multi-chunk batch spanning mesh devices runs one kernel
+    batch per device (rows never move between devices), while both host
+    syncs still cover EVERY bucket in one call each.  On the CPU backend
+    the device key is always ``None`` (``_host_rows``): every mesh device
+    is host memory, so the whole window merges into one wide numpy-stacked
+    bucket per size and the pack/scan kernels run once on the default
+    device.
+
+    On the CPU backend stage 1 syncs the stacked rows themselves and runs
+    the stats host-side (``_group_stats_host``): the XLA CPU histogram
+    kernel loses ~10x to ``np.bincount``, dc payloads then come straight
+    from the already-synced host rows, and codec row selection becomes an
+    ``np.take`` + one upload instead of a device gather per codec.  On
+    accelerators stage 1 stays the device kernel — only tiny stats cross
+    the PCIe link.  Both paths keep the engine's two-syncs-per-call
+    contract and are byte-identical (``hist_batches`` counts stats batch
+    computations on either path)."""
+    # stage 1: all histograms + run counts, one batch per bucket, ONE sync
+    rows_host: Optional[Dict[tuple, np.ndarray]] = None
+    if jax.default_backend() == "cpu":
+        rows_host = host_sync(stacked, label="codec.stats")
+        stats_host = {}
+        for k, rows in rows_host.items():
+            STATS.add(hist_batches=1)
+            stats_host[k] = _group_stats_host(rows)
+    else:
+        stats_dev = {}
+        for k, st in stacked.items():
+            STATS.add(hist_batches=1)
+            stats_dev[k] = _group_stats_batch(st)
+        stats_host = host_sync(stats_dev, label="codec.stats")
 
     # stage 2: Algorithm-2 selection + codebooks (host, trivial)
     methods: Dict[int, str] = {}
     books: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
-    for s, idxs in buckets.items():
-        hists, nruns = stats_host[s]
+    for k, idxs in buckets.items():
+        s = k[0]
+        hists, nruns = stats_host[k]
         for j, i in enumerate(idxs):
             m, book = _select(s, hists[j].astype(np.int64), int(nruns[j]),
                               cfg)
@@ -394,27 +488,44 @@ def _encode_buckets(stacked: Dict[int, jax.Array],
 
     # stage 3: dispatch one pack/scan per (bucket, codec), ONE payload sync
     pend: List[Tuple[str, int, List[int], object]] = []
-    for s, idxs in buckets.items():
-        st = stacked[s]
+    for k, idxs in buckets.items():
+        s = k[0]
+        st = stacked[k]
         pos = {i: j for j, i in enumerate(idxs)}
         h = [i for i in idxs if methods[i] == "huffman"]
         r = [i for i in idxs if methods[i] == "rle"]
         d = [i for i in idxs if methods[i] == "dc"]
+
+        def rows_for(sel_idx: List[int]) -> jax.Array:
+            # codec row selection: host take + upload when the rows are
+            # already host-side (CPU stats path), device gather otherwise
+            if rows_host is not None:
+                return jax.device_put(
+                    rows_host[k][np.asarray([pos[i] for i in sel_idx])])
+            return st[jnp.asarray([pos[i] for i in sel_idx], jnp.int32)]
+
         if h:
             lens_tab = jax.device_put(
                 np.stack([books[i][0] for i in h]).astype(np.uint32))
             codes_tab = jax.device_put(np.stack([books[i][1] for i in h]))
-            sel = jnp.asarray([pos[i] for i in h], jnp.int32)
             STATS.add(huffman_pack_batches=1)
             pend.append(("huffman", s, h,
-                         _huffman_pack_batch(st[sel], lens_tab, codes_tab)))
+                         _huffman_pack_batch(rows_for(h), lens_tab,
+                                             codes_tab)))
         if r:
-            sel = jnp.asarray([pos[i] for i in r], jnp.int32)
             STATS.add(rle_scan_batches=1)
-            pend.append(("rle", s, r, _rle_scan_batch(st[sel])))
+            pend.append(("rle", s, r, _rle_scan_batch(rows_for(r))))
         if d:
-            sel = jnp.asarray([pos[i] for i in d], jnp.int32)
-            pend.append(("dc", s, d, st[sel]))
+            if rows_host is not None:
+                # dc payloads are the raw rows — already on host, no
+                # device round-trip; .copy() detaches from the big stack
+                for i in d:
+                    segs[i] = ll.Segment("dc", s,
+                                         {"raw": rows_host[k][pos[i]].copy()},
+                                         {"n_syms": s})
+            else:
+                pend.append(("dc", s, d, st[jnp.asarray(
+                    [pos[i] for i in d], jnp.int32)]))
     mats = host_sync([p[3] for p in pend], label="codec.payload")
 
     for (kind, s, idxs, _), mat in zip(pend, mats):

@@ -21,8 +21,12 @@ split into *dispatch* (one jitted launch of the whole decompose -> quantize
 -> bitplane-encode chain per chunk, ``core.refactor_fused``) and *finish*
 (host-side lossless selection + manifest assembly, which synchronizes).
 The refactor driver keeps up to ``dispatch_ahead`` (>= 2 by default)
-dispatched chunks in flight, so chunk k+1's fused encode runs on device
-while chunk k's lossless pack and serialize run on host.  To keep the
+dispatched chunks in flight PER DEVICE, drains the whole window in one
+batched finish (one scalar gather + one stacked codec pass — 3 host syncs
+per drain, amortized ``3 / (dispatch_ahead * n_shards)`` per chunk), and
+refills every device queue from the prefetcher before the host blocks on a
+drain, so chunk k+1's fused encode runs on device while chunk k's lossless
+pack and serialize run on host.  To keep the
 pipelined path sync-free per chunk, ``_copy_in`` only calls
 ``block_until_ready`` when stage timing is enabled (``stage_timing``,
 default: serial mode only) — stage timers need the barrier, the overlap
@@ -281,11 +285,18 @@ class ChunkedRefactorPipeline:
         overlaps later host stages (on the chunk's owning device when a
         mesh is set).  Non-fused: the full per-piece compute (returns the
         finished ``Refactored``); the committed input keeps the compute on
-        the owning device there too."""
+        the owning device there too.
+
+        The placed input buffer is pipeline-owned (``_copy_in`` device_puts a
+        fresh copy), so the fused path donates it to the encode program —
+        on GPU/TPU the quantizer reuses the allocation instead of pairing
+        every chunk with a fresh one (no-op on CPU, see
+        ``refactor_fused.donation_supported``)."""
         t0 = time.perf_counter()
         with obs_trace.span("write.dispatch", **self._span_attrs(ci)):
             if self.fused:
-                out = self.sharded.dispatch(ci, dev_chunk, name=name)
+                out = self.sharded.dispatch(ci, dev_chunk, name=name,
+                                            donate=True)
             else:
                 out = rf.refactor_array(dev_chunk, name=name,
                                         levels=self.levels,
@@ -304,14 +315,14 @@ class ChunkedRefactorPipeline:
         self.stats.compute_s += time.perf_counter() - t0
         return out
 
-    def _finish_round(self, pendings: List[rff.PendingChunk]
-                      ) -> List[rf.Refactored]:
-        """Resolve a round of dispatched chunks: ONE host sync gathers the
-        whole round's scalar metadata across devices (``sharded.
-        finish_round``) instead of one sync per chunk — for a mesh of one
-        the round is one chunk, so the per-chunk sync budget is unchanged."""
+    def _finish_many(self, pendings: List[rff.PendingChunk]
+                     ) -> List[rf.Refactored]:
+        """Resolve a batch of dispatched chunks: ONE host sync gathers the
+        whole batch's scalar metadata across devices and ONE stacked codec
+        pass packs every chunk (``sharded.finish_many``) — 3 host syncs per
+        drained window, not per chunk."""
         t0 = time.perf_counter()
-        outs = self.sharded.finish_round(pendings)
+        outs = self.sharded.finish_many(pendings)
         if self.stage_timing:
             outs = [_block_stage(o) for o in outs]
         self.stats.compute_s += time.perf_counter() - t0
@@ -332,16 +343,6 @@ class ChunkedRefactorPipeline:
         self.stats.copy_out_s += time.perf_counter() - t0
         return blob
 
-    def _drain_round(self, inflight, out_q) -> None:
-        """Pop up to one round (``n_shards`` chunks, FIFO) off the in-flight
-        window, finish it with one cross-device scalar gather, and hand the
-        results to the serializer in chunk order."""
-        batch = [inflight.popleft()
-                 for _ in range(min(self.n_shards, len(inflight)))]
-        for (cj, _), refd in zip(batch,
-                                 self._finish_round([p for _, p in batch])):
-            out_q.put((cj, refd))
-
     # -- driver --------------------------------------------------------------
     def refactor(self, x: np.ndarray, name: str = "var") -> List[bytes]:
         """Returns one serialized Refactored blob per chunk."""
@@ -357,6 +358,12 @@ class ChunkedRefactorPipeline:
         syncs0 = lb.STATS.host_syncs
         disp0 = rff.STATS.dispatches
         blobs: List[Optional[bytes]] = [None] * len(slices)
+        # async-drain attribution (pipelined path): chunks per device at
+        # each drain, drain count, and host-blocked seconds during which a
+        # device queue sat empty
+        depth_at_drain: collections.Counter = collections.Counter()
+        n_drains = [0]
+        idle_at_drain = [0.0]
 
         if not self.pipelined:
             for ci, sl in enumerate(slices):
@@ -410,9 +417,62 @@ class ChunkedRefactorPipeline:
             # With a mesh the window is per DEVICE: consecutive chunks land
             # on different devices (round-robin), so ``dispatch_ahead``
             # chunks in flight per device means dispatch_ahead * n_shards
-            # in the window before the oldest chunk must finish.
+            # in the window before the oldest chunk must finish.  Draining
+            # is batched across the whole window (one scalar gather + one
+            # stacked codec pass per drain, not per round), and the device
+            # queues are opportunistically refilled from the prefetcher
+            # BEFORE the host blocks on a drain, so the next dispatches
+            # overlap the batched finish.
             window = self.dispatch_ahead * self.n_shards
             inflight: "collections.deque[tuple]" = collections.deque()
+
+            def dispatch_one(cj: int, dev) -> None:
+                pend = self._dispatch(dev, f"{name}.{cj}", cj)
+                if isinstance(pend, rf.Refactored):
+                    # non-fused: _dispatch already completed the chunk;
+                    # buffering it would only delay the serializer
+                    out_q.put((cj, pend))
+                else:
+                    inflight.append((cj, pend))
+
+            def refill_nowait() -> None:
+                # opportunistic, non-blocking: anything the prefetcher has
+                # already staged is dispatched now so every device queue is
+                # as deep as possible while the host resolves the batch
+                while len(inflight) < window:
+                    try:
+                        cj, dev = prefetch_q.get_nowait()
+                    except queue.Empty:
+                        return
+                    if cj < 0:
+                        prefetch_q.put((cj, dev))  # re-park the sentinel
+                        return
+                    if errors:
+                        continue
+                    dispatch_one(cj, dev)
+
+            def drain_batch() -> None:
+                # pop exactly the oldest window (deterministic batch size,
+                # so the sync budget is counter-testable: 3 host syncs per
+                # drain — scalars + codec stats + codec payload), refill
+                # the device queues, then resolve the batch in one go
+                batch = [inflight.popleft()
+                         for _ in range(min(window, len(inflight)))]
+                refill_nowait()
+                depth_at_drain.update(
+                    self.sharded.shard_for(cj) for cj, _ in batch)
+                live = {self.sharded.shard_for(cj) for cj, _ in inflight}
+                n_drains[0] += 1
+                t0 = time.perf_counter()
+                outs = self._finish_many([p for _, p in batch])
+                # idle-at-drain: devices with an empty queue during this
+                # host-blocking finish had nothing to execute — attributable
+                # scheduler slack (gauged as write.idle_at_drain_s)
+                idle_at_drain[0] += (time.perf_counter() - t0) * sum(
+                    1 for d in range(self.n_shards) if d not in live)
+                for (cj, _), refd in zip(batch, outs):
+                    out_q.put((cj, refd))
+
             try:
                 while True:
                     ci, dev = prefetch_q.get()
@@ -420,17 +480,11 @@ class ChunkedRefactorPipeline:
                         break
                     if errors:
                         continue  # drain the prefetcher; skip further compute
-                    pend = self._dispatch(dev, f"{name}.{ci}", ci)
-                    if isinstance(pend, rf.Refactored):
-                        # non-fused: _dispatch already completed the chunk;
-                        # buffering it would only delay the serializer
-                        out_q.put((ci, pend))
-                        continue
-                    inflight.append((ci, pend))
+                    dispatch_one(ci, dev)
                     while len(inflight) >= window:
-                        self._drain_round(inflight, out_q)  # O overlaps next
+                        drain_batch()  # O + next dispatch overlap the finish
                 while inflight and not errors:
-                    self._drain_round(inflight, out_q)
+                    drain_batch()
             except BaseException as exc:  # noqa: BLE001 - compute failed
                 errors.append(exc)
                 while ci >= 0:  # release the prefetcher parked on its put
@@ -450,6 +504,11 @@ class ChunkedRefactorPipeline:
                     (lb.STATS.host_syncs - syncs0) / len(slices))
             m.gauge("write.dispatches_per_chunk",
                     (rff.STATS.dispatches - disp0) / len(slices))
+            if n_drains[0]:
+                for d in range(self.n_shards):
+                    m.gauge(f"write.inflight_depth.d{d}",
+                            depth_at_drain[d] / n_drains[0])
+                m.gauge("write.idle_at_drain_s", idle_at_drain[0])
         return [b for b in blobs if b is not None]
 
 
@@ -462,9 +521,13 @@ class ChunkedReconstructPipeline:
     final concatenation (the D2H copy-out of Fig 4b) pulls results to host.
     ``incremental=False`` drives the from-scratch oracle readers instead.
 
-    ``depth`` is the overlap feeder's look-ahead (``overlap_map`` depth):
-    how many chunks may sit deserialized+fetched ahead of the compute
-    stage.  Order and exception propagation are preserved at any depth.
+    ``depth`` is the overlap feeder's look-ahead (``overlap_map`` depth)
+    AND the per-device drain window: staged chunks accumulate until
+    ``depth * n_shards`` engines hold undecoded plane groups, then one
+    per-device batched pass delta-decodes them all (``sharded.drain``) —
+    no global round barrier; a device's engines drain together whenever
+    the window fills.  Order and exception propagation are preserved at
+    any depth.
 
     ``mesh`` shards reconstruction across devices (``core.sharded``): each
     chunk's incremental engine state lives on the chunk's round-robin
@@ -519,19 +582,47 @@ class ChunkedReconstructPipeline:
             self.stats.copy_in_s += time.perf_counter() - t0
             return reader
 
+        # Async per-device drains: each chunk's plan+fetch stages its delta
+        # plane groups on the chunk's engine WITHOUT decoding (``read.stage``);
+        # once a window of ``depth * n_shards`` chunks is staged, ONE
+        # per-device batched pass (``sharded.drain`` -> ``reconstruct.
+        # batch_apply_pending``) delta-decodes every staged engine — decode
+        # launches amortize across the window and never mix devices — then
+        # each chunk recomposes from its (already decoded) engine state.
+        staged: List[tuple] = []
+        window = max(self.depth * self.sharded.n_shards, 1)
+
+        def flush() -> None:
+            if not staged:
+                return
+            t0 = time.perf_counter()
+            engines = [r.engine for _, r in staged if r.engine is not None]
+            if engines:
+                with obs_trace.span("read.drain", chunks=len(engines)):
+                    self.sharded.drain(engines)
+            for cj, reader in staged:
+                with obs_trace.span("read.recompose", **_attrs(cj)):
+                    xh, _ = reader.reconstruct_device()
+                    outs[cj] = _block_stage(xh)
+            staged.clear()
+            self.stats.compute_s += time.perf_counter() - t0
+
         def recompose(ci: int, reader: rtv.ProgressiveReader) -> None:
             t0 = time.perf_counter()
-            with obs_trace.span("read.recompose", **_attrs(ci)):
-                xh, _, fetched = reader.retrieve_device(tol)
-                outs[ci] = _block_stage(xh)
+            with obs_trace.span("read.stage", **_attrs(ci)):
+                fetched = reader.stage_retrieve(tol)
             self.stats.compute_s += time.perf_counter() - t0
             self.stats.bytes_in += fetched
+            staged.append((ci, reader))
+            if len(staged) >= window:
+                flush()
 
         # X -> I edge: upcoming chunks' deserialization+fetch happens on the
         # overlap_map feeder thread, at most ``depth`` chunks ahead of the
         # compute stage.
         overlap_map(len(blobs), decompress, recompose,
                     pipelined=self.pipelined, depth=self.depth)
+        flush()
 
         self.stats.chunks += len(blobs)
         t0 = time.perf_counter()

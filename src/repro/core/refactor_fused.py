@@ -132,6 +132,7 @@ class FusedPlan:
     entries: Tuple[_StackEntry, ...]
     empty_pieces: Tuple[int, ...]
     run: object           # jitted (x,) -> (exps, amax?, rng?, *blob stacks)
+    run_donated: object   # same program, input buffer donated
     has_scalars: bool     # amax/range present (x.size > 0)
 
 
@@ -176,8 +177,7 @@ def fused_encode_plan(shape: Tuple[int, ...], levels: int, design: str,
         for gi in range(len(group_planes)):
             entries.append(_StackEntry("group", gi, tuple(idxs), w))
 
-    @jax.jit
-    def run(x):
+    def _run(x):
         x = x.astype(jnp.float32)
         pieces = dc.decompose(x, levels)
         exps = []
@@ -208,10 +208,16 @@ def fused_encode_plan(shape: Tuple[int, ...], levels: int, design: str,
                 row += g
         return tuple(outs)
 
+    # run_donated aliases the input buffer into the program's workspace
+    # (donate_argnums) so a pipeline that owns the placed chunk avoids one
+    # encode-input allocation per chunk; jit compiles lazily, so the donated
+    # twin costs nothing unless a caller opts in (``dispatch_encode(donate=
+    # True)`` — gated on backends that implement donation).
     return FusedPlan(shape=tuple(shape), levels=levels, design=design,
                      mag_bits=mag_bits, group_planes=group_planes,
                      piece_ns=piece_ns, entries=tuple(entries),
-                     empty_pieces=empty_pieces, run=run,
+                     empty_pieces=empty_pieces, run=jax.jit(_run),
+                     run_donated=jax.jit(_run, donate_argnums=(0,)),
                      has_scalars=bool(size))
 
 
@@ -234,21 +240,35 @@ class PendingChunk:
     stacks: Tuple[jax.Array, ...]        # (B, S) uint8 rows, plan.entries order
 
 
+def donation_supported() -> bool:
+    """Whether the current backend implements input-buffer donation (XLA
+    ignores donations on CPU with a warning, so the donated program twin is
+    only selected on accelerator backends)."""
+    return jax.default_backend() in ("gpu", "tpu")
+
+
 def dispatch_encode(x, name: str = "var",
                     levels: Optional[int] = None,
                     design: Optional[str] = None,
                     mag_bits: Optional[int] = None,
                     hybrid: Optional[ll.HybridConfig] = None,
                     backend: Optional[str] = None,
-                    config: Optional[tn.RefactorConfig] = None
-                    ) -> PendingChunk:
+                    config: Optional[tn.RefactorConfig] = None,
+                    donate: bool = False) -> PendingChunk:
     """Launch one chunk's whole encode chain as a single jitted dispatch.
 
     Returns immediately with device handles; no host synchronization
     happens until ``finish_encode``.  All knobs normalize into ONE
     ``RefactorConfig`` (``config=`` or legacy kwargs — explicit kwargs win;
     see ``repro.tune.config.as_config``), and the fused program is keyed on
-    that config's fields, kernel tiling included."""
+    that config's fields, kernel tiling included.
+
+    ``donate=True`` marks ``x`` as dead after the dispatch so XLA may reuse
+    its buffer for the encode workspace (no per-chunk input reallocation) —
+    pass it ONLY when the caller owns ``x`` exclusively (the chunked
+    pipeline's placed copies qualify; caller-held arrays do not).  On
+    backends without donation support (CPU) it is a silent no-op and the
+    non-donated program runs — output bytes are identical either way."""
     cfg = tn.as_config(config, design=design, mag_bits=mag_bits,
                        hybrid=hybrid, backend=backend)
     hybrid = cfg.hybrid(force=hybrid.force if hybrid is not None else None)
@@ -261,7 +281,9 @@ def dispatch_encode(x, name: str = "var",
         plan = fused_encode_plan(tuple(x.shape), levels, cfg.design, mag_bits,
                                  group_planes, cfg.backend,
                                  cfg.tiles_per_block, cfg.unroll)
-        outs = plan.run(x)
+        run = plan.run_donated if donate and donation_supported() \
+            else plan.run
+        outs = run(x)
         STATS.add(dispatches=1, pieces_encoded=len(plan.piece_ns))
         obs_trace.event(obs_trace.EV_DISPATCH, kind="fused_encode", name=name,
                         pieces=len(plan.piece_ns))
@@ -282,16 +304,72 @@ def finish_encode(p: PendingChunk, _scalars=None) -> rf.Refactored:
     round of chunks across devices in one ``host_sync`` — skip the per-chunk
     sync; values must be exactly ``host_sync((p.exps, p.amax, p.rng))``."""
     STATS.add(finishes=1)
-    plan = p.plan
     with obs_trace.span("encode.finish", name=p.name):
         scalars = (lb.host_sync((p.exps, p.amax, p.rng),
                                 label="encode.scalars")
                    if _scalars is None else _scalars)
+        segs_flat = lb.encode_groups_stacked(p.stacks, p.hybrid)
+        return _assemble(p, scalars, segs_flat)
+
+
+def stack_rows(p: PendingChunk) -> int:
+    """Total blob rows ``p``'s stacks contribute to a flattened
+    ``encode_groups_stacked`` call (the split key of the batched finish)."""
+    return sum(int(st.shape[0]) for st in p.stacks)
+
+
+def finish_encode_many(pendings: Sequence[PendingChunk], _scalars=None
+                       ) -> List[rf.Refactored]:
+    """Resolve MANY dispatched chunks with batch-amortized host work: ONE
+    scalar sync gathers every chunk's (exps, amax, range), and ONE stacked
+    lossless pass encodes every chunk's blob rows (two syncs total) — the
+    whole batch costs 3 host syncs instead of 3 per chunk.
+
+    Blob rows of all chunks flow through a single ``encode_groups_stacked``
+    call (same-size stacks merge ACROSS chunks, so the vmapped pack/scan
+    kernels run at batch width = the whole drain window); results come back
+    in input order and are byte-identical to ``[finish_encode(p) for p in
+    pendings]`` — the batch boundary is a scheduling choice, never a format
+    one.  Chunks with differing ``HybridConfig``s are grouped and batched
+    per config (the codec decision thresholds are config-dependent)."""
+    pendings = list(pendings)
+    if not pendings:
+        return []
+    if _scalars is None:
+        _scalars = lb.host_sync([(p.exps, p.amax, p.rng) for p in pendings],
+                                label="encode.scalars")
+    STATS.add(finishes=len(pendings))
+    out: List[Optional[rf.Refactored]] = [None] * len(pendings)
+    by_cfg = lb.batch_jobs(pendings, lambda p: (
+        p.hybrid.group_size, p.hybrid.size_threshold, p.hybrid.cr_threshold,
+        p.hybrid.force))
+    with obs_trace.span("encode.finish_many", chunks=len(pendings)):
+        for idxs in by_cfg.values():
+            segs_flat = lb.encode_groups_stacked(
+                [st for i in idxs for st in pendings[i].stacks],
+                pendings[idxs[0]].hybrid)
+            base = 0
+            for i in idxs:
+                n = stack_rows(pendings[i])
+                out[i] = _assemble(pendings[i], _scalars[i],
+                                   segs_flat[base:base + n])
+                base += n
+    return out
+
+
+def _assemble(p: PendingChunk, scalars, segs_flat: List[ll.Segment]
+              ) -> rf.Refactored:
+    """Host-side manifest assembly for one finished chunk: scatter the
+    chunk's flattened segment rows back to (piece, kind, group) slots and
+    build the ``Refactored``.  ``scalars`` are the synced host values of
+    (exps, amax, rng); ``segs_flat`` the chunk's segments in
+    ``plan.entries`` row order."""
+    plan = p.plan
+    with obs_trace.span("encode.assemble", name=p.name):
         exps = [int(e) for e in scalars[0]]
         amax = float(scalars[1]) if p.amax is not None else 0.0
         rng = float(scalars[2]) if p.rng is not None else 0.0
 
-        segs_flat = lb.encode_groups_stacked(p.stacks, p.hybrid)
         # scatter flattened rows back to (piece, kind, group) slots
         sign_segs: Dict[int, ll.Segment] = {}
         group_segs: Dict[Tuple[int, int], ll.Segment] = {}

@@ -315,13 +315,27 @@ class ProgressiveReader:
             total += 4 * w * (kept + 1)  # +1: the sign plane
         return total
 
+    def stage_retrieve(self, tol: float, relative: bool = False) -> int:
+        """Plan + fetch + stage WITHOUT reconstructing; returns bytes fetched.
+
+        In incremental mode the newly-fetched plane groups land *staged* on
+        the engine (device upload only — the delta bitplane decode is
+        deferred), so many readers' staged groups can be drained in one
+        per-device batched pass (``sharded.ShardedReconstructEngine.drain``
+        over ``reconstruct.batch_apply_pending``) before each reader's
+        ``reconstruct_device``.  The chunked reconstruct pipeline uses this
+        split to decode a whole in-flight window of chunks per launch batch
+        instead of one chunk at a time.  Oracle (non-incremental) mode
+        materializes host planes at fetch time, so staging is simply the
+        fetch."""
+        if relative:
+            tol = tol * self.ref.data_range
+        return self._fetch_to(self.plan(tol))
+
     def retrieve_device(self, tol: float, relative: bool = False
                         ) -> Tuple[jax.Array, float, int]:
         """``retrieve`` with the reconstruction left on device."""
-        if relative:
-            tol = tol * self.ref.data_range
-        target = self.plan(tol)
-        fetched = self._fetch_to(target)
+        fetched = self.stage_retrieve(tol, relative=relative)
         x, bound = self.reconstruct_device()
         return x, bound, fetched
 

@@ -85,8 +85,10 @@ class DatasetWriter:
         self.hybrid = hybrid
         self.pipelined = pipelined
         self.backend = backend
-        # fused one-dispatch write engine + in-flight encode depth (see
-        # core.refactor_fused / ChunkedRefactorPipeline dispatch-ahead)
+        # fused one-dispatch write engine + per-device in-flight encode
+        # depth: the pipelined write keeps dispatch_ahead chunks queued per
+        # mesh device and drains whole windows through one batched finish
+        # (see core.refactor_fused.finish_encode_many / docs/distributed.md)
         self.fused = fused
         self.dispatch_ahead = dispatch_ahead
         self.config = config

@@ -19,6 +19,9 @@ only *ranks* candidates, and the few measured probe runs
 from __future__ import annotations
 
 import dataclasses
+import json
+import math
+import os
 from typing import Dict, Optional, Sequence, Tuple
 
 from repro.tune.config import RefactorConfig
@@ -46,10 +49,55 @@ NOMINAL_PEAKS: Dict[str, Peaks] = {
 }
 
 
+# where a machine's measured roofline calibration lives; overridable so CI
+# jobs and tests can point the tuner at a specific artifact
+ROOFLINE_ARTIFACT_ENV = "REPRO_ROOFLINE_JSON"
+DEFAULT_ROOFLINE_ARTIFACT = os.path.join("out", "benchmarks",
+                                         "roofline.json")
+
+
+def calibrated_peaks(platform: str,
+                     path: Optional[str] = None) -> Optional[Peaks]:
+    """This machine's measured effective peaks from its roofline artifact.
+
+    ``benchmarks/roofline.py`` probes the fused program and publishes a
+    ``calibrated`` section — nominal peaks divided by the fitted model
+    scale, i.e. the peak rates at which THIS machine actually moved the
+    program's bytes/flops.  When the artifact exists and matches the
+    platform, the cost model starts from those instead of the hard-coded
+    nominal constants (ROADMAP autotuner-deepening item), so candidate
+    rankings reflect the machine rather than a v5e spec sheet.
+
+    Returns ``None`` (nominal fallback) when the artifact is absent,
+    unreadable, for another platform, or carries non-finite/zero rates —
+    a corrupt artifact must never poison the tuner."""
+    path = path if path is not None else os.environ.get(
+        ROOFLINE_ARTIFACT_ENV, DEFAULT_ROOFLINE_ARTIFACT)
+    try:
+        with open(path, "r", encoding="utf-8") as f:
+            doc = json.load(f)
+        cal = doc["calibrated"]
+        if cal.get("platform") != platform:
+            return None
+        peaks = Peaks(float(cal["flops"]), float(cal["hbm_bw"]),
+                      float(cal["link_bw"]))
+    except (OSError, ValueError, KeyError, TypeError):
+        return None
+    vals = (peaks.flops, peaks.hbm_bw, peaks.link_bw)
+    if not all(math.isfinite(v) and v > 0 for v in vals):
+        return None
+    return peaks
+
+
 def platform_peaks(platform: Optional[str] = None) -> Peaks:
+    """Peaks for scoring: the machine's calibrated roofline artifact when
+    one is present (``calibrated_peaks``), else the nominal platform row."""
     if platform is None:
         import jax
         platform = jax.default_backend()
+    cal = calibrated_peaks(platform)
+    if cal is not None:
+        return cal
     return NOMINAL_PEAKS.get(platform, NOMINAL_PEAKS["cpu"])
 
 

@@ -14,8 +14,11 @@
   3. run a handful of measured probe writes (``probes`` best-scored
      candidates, the hard-coded default ALWAYS included) through the real
      ``refactor_array`` fused path, calibrate the model's scale from the
-     default's probe, and branch the best-measured program config across
-     ``dispatch_ahead`` (a pipeline knob the program's HLO cannot see);
+     default's probe, then probe-search ``dispatch_ahead`` by running the
+     best-measured program config through the real chunked pipeline at
+     every candidate window depth (a scheduling knob the program's HLO
+     cannot see — only a multi-chunk pipelined run exercises the async
+     per-device drains it controls);
   4. cache the measured winner keyed by backend fingerprint.
 
 The measured-best-of-probes rule keeps the tuner safe: the default config is
@@ -138,6 +141,64 @@ def _measure_write(x: np.ndarray, cfg: RefactorConfig,
     return best
 
 
+def _measure_pipeline_write(x: np.ndarray, cfg: RefactorConfig,
+                            levels: Optional[int],
+                            repeats: int = 2) -> float:
+    """Measured seconds for a multi-chunk PIPELINED write with ``cfg`` —
+    the probe that actually sees ``dispatch_ahead`` (per-device in-flight
+    window + drain batch size), which a single-chunk program probe cannot.
+    Compile excluded: one warmup, then best-of-``repeats``."""
+    from repro.core import pipeline as pl
+
+    def once() -> float:
+        t0 = time.perf_counter()
+        pipe = pl.ChunkedRefactorPipeline(levels=levels, pipelined=True,
+                                          config=cfg, use_tune_cache=False)
+        pipe.refactor(x)
+        return time.perf_counter() - t0
+
+    once()
+    best = min(once() for _ in range(max(repeats, 1)))
+    STATS.add(probes_run=1)
+    return best
+
+
+def _tune_dispatch_ahead(best_prog: RefactorConfig, shape: Sequence[int],
+                         dtype: str, levels: Optional[int],
+                         n_chunks: int = 6
+                         ) -> Tuple[RefactorConfig,
+                                    List[Tuple[RefactorConfig, float]]]:
+    """Probe-search the per-device in-flight window depth.
+
+    ``dispatch_ahead`` is pure scheduling — the serialized bytes are
+    identical at any depth — so the HLO cost model is blind to it and
+    measurement is the only honest signal: run the winning program config
+    through the real chunked pipeline (``n_chunks`` chunks of the probe
+    shape, async window drains included) at every candidate depth and keep
+    the fastest.  Returns (winner, [(cfg, seconds) per depth probed])."""
+    n = int(np.prod(shape, dtype=np.int64)) if len(shape) else 1
+    fallback = (best_prog if best_prog.dispatch_ahead in DISPATCH_AHEAD
+                else best_prog.replace(dispatch_ahead=DISPATCH_AHEAD[1]))
+    if n == 0:
+        return fallback, []
+    if levels is None:
+        from repro.core import decompose as dc
+        levels = dc.num_levels((n,))
+    x = _probe_chunk((n_chunks * n,), dtype)
+    timed: List[Tuple[RefactorConfig, float]] = []
+    for da in DISPATCH_AHEAD:
+        cfg = best_prog.replace(dispatch_ahead=da, chunk_elems=n)
+        try:
+            timed.append((cfg, _measure_pipeline_write(x, cfg, levels)))
+        except Exception:
+            continue
+    if not timed:
+        return fallback, []
+    da = min(timed, key=lambda cs: cs[1])[0].dispatch_ahead
+    # probe chunking stays out of the winner: only the depth is adopted
+    return best_prog.replace(dispatch_ahead=da), timed
+
+
 def tune(shape: Sequence[int], dtype: str = "float32",
          levels: Optional[int] = None, backend: str = "auto",
          n_devices: int = 1, probes: int = 3,
@@ -200,18 +261,25 @@ def tune(shape: Sequence[int], dtype: str = "float32",
     model.calibrate(base, measured[0][1])
     best_prog = min(measured, key=lambda cs: cs[1])[0]
 
-    # pipeline knob branch: dispatch_ahead changes host/device overlap, not
-    # the program — pick by a cheap analytic rule (deeper in-flight windows
-    # help when the program is short enough to finish before the host frees
-    # a slot; one extra probe point on the frontier keeps it honest)
-    best = best_prog
-    if best.dispatch_ahead not in DISPATCH_AHEAD:
-        best = best.replace(dispatch_ahead=DISPATCH_AHEAD[1])
+    # pipeline knob branch: dispatch_ahead changes host/device overlap and
+    # the async drain batch size, not the program — the HLO model cannot
+    # rank it, so probe it through the real chunked pipeline and keep the
+    # fastest measured window depth.  If every program probe failed the
+    # machine cannot be trusted to probe more: keep the default window.
+    if np.isfinite(min(s for _, s in measured)):
+        best, da_probes = _tune_dispatch_ahead(best_prog, shape, dtype,
+                                               levels)
+    else:
+        best = (best_prog if best_prog.dispatch_ahead in DISPATCH_AHEAD
+                else best_prog.replace(dispatch_ahead=DISPATCH_AHEAD[1]))
+        da_probes = []
 
     tcache.store(
         fp, problem, best,
         meta={"scores": [[c.to_json(), s] for c, s in scored[:8]],
               "probes": [[c.to_json(), s] for c, s in measured],
+              "dispatch_probes": [[c.dispatch_ahead, s]
+                                  for c, s in da_probes],
               "model_scale": model.scale,
               "n_candidates": len(cands)},
         root=cache_root)

@@ -266,9 +266,18 @@ class _FakeModel:
         return self.scale
 
 
-def _patch_tuner(monkeypatch, measure):
+def _patch_tuner(monkeypatch, measure, pipeline_measure=None):
     monkeypatch.setattr(tsearch, "CostModel", _FakeModel)
     monkeypatch.setattr(tsearch, "_measure_write", measure)
+    # the dispatch_ahead probe runs real multi-chunk pipelined writes;
+    # fake it too (deterministic: the default depth measures fastest) so
+    # tune() tests stay compile-free
+    monkeypatch.setattr(
+        tsearch, "_measure_pipeline_write",
+        pipeline_measure if pipeline_measure is not None
+        else (lambda x, cfg, levels, repeats=2:
+              0.5 if cfg.dispatch_ahead == DEFAULT_CONFIG.dispatch_ahead
+              else 1.0))
 
 
 def test_tune_measured_best_wins_then_cache_hit(tmp_path, monkeypatch):
@@ -343,3 +352,54 @@ def test_cost_model_real_program():
     assert m.score(DEFAULT_CONFIG) == pytest.approx(before * 10)
     # pipeline-knob-only variants share the lowering cache
     assert m.cost(DEFAULT_CONFIG.replace(dispatch_ahead=4)) is cost
+
+
+def test_tune_probes_dispatch_ahead_through_pipeline(tmp_path, monkeypatch):
+    """The window-depth knob is picked by MEASURED multi-chunk pipelined
+    probes (one per candidate depth, on probe-shape chunks), and the probe
+    chunking never leaks into the cached winner."""
+    _isolate(tmp_path, monkeypatch)
+    seen = []
+
+    def pmeasure(x, cfg, levels, repeats=2):
+        seen.append((cfg.dispatch_ahead, cfg.chunk_elems, x.size))
+        return {1: 0.9, 2: 0.2, 4: 0.8}[cfg.dispatch_ahead]
+
+    _patch_tuner(monkeypatch, lambda x, cfg, levels, repeats=2: 1.0,
+                 pipeline_measure=pmeasure)
+    r = tn.tune((1024,), levels=2, probes=1)
+    assert r.config.dispatch_ahead == 2  # fastest measured depth wins
+    assert [d for d, _, _ in seen] == list(tsearch.DISPATCH_AHEAD)
+    assert all(ce == 1024 and nx == 6 * 1024 for _, ce, nx in seen)
+    assert r.config.chunk_elems == DEFAULT_CONFIG.chunk_elems
+    # the depth survives the cache round-trip
+    assert tn.tune((1024,), levels=2).config.dispatch_ahead == 2
+
+
+def test_platform_peaks_calibrated_from_roofline_artifact(tmp_path,
+                                                          monkeypatch):
+    """tune.cost reads the machine's roofline.json 'calibrated' section when
+    present (env-pointed artifact), and falls back to NOMINAL_PEAKS on any
+    platform mismatch, corruption, or unusable rates."""
+    from repro.tune import cost as tc
+
+    art = tmp_path / "roofline.json"
+    art.write_text(json.dumps({"calibrated": {
+        "platform": "cpu", "scale": 2.0,
+        "flops": 5e10, "hbm_bw": 1.5e10, "link_bw": 5e9}}))
+    monkeypatch.setenv(tc.ROOFLINE_ARTIFACT_ENV, str(art))
+    p = tc.platform_peaks("cpu")
+    assert (p.flops, p.hbm_bw, p.link_bw) == (5e10, 1.5e10, 5e9)
+    # another platform's artifact must not apply
+    assert tc.platform_peaks("gpu") == tc.NOMINAL_PEAKS["gpu"]
+    # corrupt artifact -> nominal, never an exception
+    art.write_text("{not json")
+    assert tc.platform_peaks("cpu") == tc.NOMINAL_PEAKS["cpu"]
+    # zero/non-finite rates are unusable -> nominal
+    art.write_text(json.dumps({"calibrated": {
+        "platform": "cpu", "flops": 0.0, "hbm_bw": 1e9, "link_bw": 1e9}}))
+    assert tc.platform_peaks("cpu") == tc.NOMINAL_PEAKS["cpu"]
+    # absent artifact -> nominal
+    monkeypatch.delenv(tc.ROOFLINE_ARTIFACT_ENV)
+    monkeypatch.chdir(tmp_path)
+    assert tc.platform_peaks("cpu") == tc.NOMINAL_PEAKS["cpu"]
