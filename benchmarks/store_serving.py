@@ -25,6 +25,8 @@ from repro.core import lossless_batch as lb
 from repro.data.fields import gaussian_field
 from repro.store import (CachingBackend, DatasetStore, DatasetWriter,
                          LocalFileBackend, RetrievalService)
+from repro.store import layout as lo
+from repro.store import reliability as rl
 
 TOLS = [1e-1, 1e-2, 1e-3, 1e-4, 1e-5]
 N_SESSIONS = 4
@@ -110,6 +112,38 @@ def run(shape=(64, 64, 64), chunk_elems=40000) -> list:
         lines.append(row("store_warm_retrieve", t_warm,
                          f"speedup={t_cold / max(t_warm, 1e-9):.2f}x"))
         store.close()
+
+        # ---- checksum verification overhead -------------------------------
+        # The reliability layer's integrity cost is exactly one CRC-32 pass
+        # over every stored blob (write side records, read side verifies).
+        # Measure that pass DIRECTLY and gate its fraction of the measured
+        # write / cold-retrieve times — stable against machine noise, unlike
+        # differencing two full A/B runs whose single-trial jitter dwarfs a
+        # <3% effect.
+        with open(lo.segment_path(root, entry.segment_file), "rb") as f:
+            seg_bytes = f.read()
+        ranges = [(g.offset, g.size) for c in entry.chunks for p in c.pieces
+                  for g in [p.sign] + p.groups]
+
+        def crc_pass():
+            for off, size in ranges:
+                rl.checksum(seg_bytes[off:off + size])
+
+        t_crc = timeit(crc_pass, warmup=1, iters=5)
+        result["checksum"] = {
+            "crc_pass_s": t_crc,
+            "segments": len(ranges),
+            "bytes": len(seg_bytes),
+            # fraction of the measured write / cold-read times one full
+            # checksum pass costs (the read path checksums the same blobs
+            # the write path did, so one pass bounds either side)
+            "write_overhead": t_crc / max(t_write, 1e-9),
+            "read_overhead": t_crc / max(t_cold, 1e-9),
+        }
+        lines.append(row(
+            "store_checksum_pass", t_crc,
+            f"write_overhead={result['checksum']['write_overhead']:.4f}"
+            f";read_overhead={result['checksum']['read_overhead']:.4f}"))
 
         # ---- N concurrent sessions: batched vs. one-by-one ----------------
         # fresh sessions every call: session state is incremental, so reusing

@@ -75,6 +75,13 @@ def save(ckpt_dir: str | Path, step: int, tree: Any,
     tmp = ckpt_dir / f".tmp_step_{step:08d}"
     if tmp.exists():
         shutil.rmtree(tmp)
+    # sweep stale tmp dirs from OTHER steps' crashed saves: a killed writer
+    # leaves .tmp_step_M behind forever (only the same-step path above would
+    # clean it), silently leaking a full checkpoint of disk per crash
+    if ckpt_dir.exists():
+        for stale in ckpt_dir.glob(".tmp_step_*"):
+            if stale != tmp:
+                shutil.rmtree(stale, ignore_errors=True)
     tmp.mkdir(parents=True)
     names, arrays, _ = _flatten(tree)
     manifest: Dict[str, Any] = {"step": step, "leaves": {}, "meta": meta or {},

@@ -93,6 +93,13 @@ class QoIRetrievalResult:
     bitrate: float                   # bits per element, summed over variables
     eps_final: List[float]
     converged: bool
+    # plane groups the readers dropped under the degrade policy during THIS
+    # call.  converged=False together with degraded_groups > 0 means tau was
+    # unattainable because of unreachable data, not because the stored
+    # precision ran out — the loop stops at the (degradation-raised) floor
+    # instead of spinning, and tau_estimated reports the honest achieved
+    # error bound.
+    degraded_groups: int = 0
     # per Algorithm-3 iteration: bytes fetched, delta plane bytes actually
     # decoded (incremental engine), and the full-decode baseline (what a
     # from-scratch decode of the iteration's state would run through the
@@ -156,6 +163,7 @@ def progressive_qoi_retrieve(
 
     tau_p = np.inf
     bytes0 = sum(r.total_bytes_fetched for r in readers)
+    deg0 = sum(getattr(r, "degraded_count", 0) for r in readers)
     vals: List[jax.Array] = [None] * n_v
     eps_ach = np.zeros(n_v)
     it = 0
@@ -228,4 +236,6 @@ def progressive_qoi_retrieve(
         values=[np.asarray(v) for v in vals], tau_estimated=tau_p,
         tau_requested=tau, iterations=it, bytes_fetched=total_bytes,
         bitrate=8.0 * total_bytes / max(n_vals, 1),
-        eps_final=list(eps_ach), converged=converged, per_iteration=per_iter)
+        eps_final=list(eps_ach), converged=converged, per_iteration=per_iter,
+        degraded_groups=sum(getattr(r, "degraded_count", 0)
+                            for r in readers) - deg0)

@@ -39,6 +39,11 @@ class _PieceState:
     planes: Optional[np.ndarray] = None     # oracle mode: (P, W) host prefix
     sign: Optional[np.ndarray] = None       # oracle mode: sign plane (1, W)
     bytes_fetched: int = 0
+    # degradation cap: max reachable group count for this piece this session
+    # (None = all groups reachable).  Set when a fetch fails under degrade=
+    # policy; planning never asks for groups at or beyond the cap, so the
+    # reported bound stays honest about what was actually applied.
+    cap: Optional[int] = None
 
 
 class SegmentSource:
@@ -91,7 +96,8 @@ class ProgressiveReader:
                  source: Optional[SegmentSource] = None,
                  incremental: bool = True,
                  device: Optional[jax.Device] = None,
-                 config: Optional["tn.RefactorConfig"] = None):
+                 config: Optional["tn.RefactorConfig"] = None,
+                 degrade: bool = False):
         from repro import tune as tn  # local: keep import graph flat
         # config= replays a store's tuned plan (manifest VariableEntry.plan):
         # decode kernels run with the same tiling the writer used
@@ -103,6 +109,15 @@ class ProgressiveReader:
         self.state = [_PieceState() for _ in ref.pieces]
         self.total_bytes_fetched = 0
         self.incremental = incremental
+        # degrade=True: a plane group whose fetch fails with a typed store
+        # error is dropped for the session (the piece is capped below it) and
+        # the reconstruction is served WITHOUT it — the bound machinery
+        # reports the honestly widened bound because planning and
+        # current_bound() only ever see applied groups.  degrade=False (the
+        # default) re-raises: callers that need the exact tolerance fail
+        # loudly instead of silently relaxing it.
+        self.degrade = degrade
+        self.degraded: List[Tuple[int, int, str]] = []  # (piece, group, errtype)
         # mesh-sharded read path: pin the engine's state to the chunk's
         # owning device (core.sharded); None = uncommitted (today's path)
         self.device = device
@@ -121,6 +136,25 @@ class ProgressiveReader:
     def floor_bound(self) -> float:
         return self.ref.bound([p.mag_bits for p in self.ref.pieces])
 
+    # -------------------------------------------------------- degradation --
+    def _limit(self, i: int) -> int:
+        """Max reachable group count for piece ``i`` (cap-aware)."""
+        n = len(self.ref.pieces[i].groups)
+        cap = self.state[i].cap
+        return n if cap is None else min(n, cap)
+
+    @property
+    def degraded_count(self) -> int:
+        """Plane groups dropped by the degrade policy this session."""
+        return len(self.degraded)
+
+    def reset_degraded(self) -> None:
+        """Forget degradation caps: the next fetch retries dropped groups
+        (e.g. after the operator repaired the store)."""
+        self.degraded.clear()
+        for st in self.state:
+            st.cap = None
+
     def plan(self, tol: float) -> List[int]:
         """Greedy (piece, group) allocation: target planes-kept per piece."""
         r = self.ref
@@ -131,7 +165,7 @@ class ProgressiveReader:
             best, best_score = None, 0.0
             for i, pm in enumerate(r.pieces):
                 gi = groups[i]
-                if gi >= len(pm.groups):
+                if gi >= self._limit(i):
                     continue
                 new_kept = kept[i] + pm.group_planes[gi]
                 d_eps = pm.weight * (r.piece_eps(i, kept[i]) - r.piece_eps(i, new_kept))
@@ -156,15 +190,16 @@ class ProgressiveReader:
         sign segment of a cold piece is listed as (piece, -1)."""
         wants: List[Tuple[int, int]] = []
         for i, st in enumerate(self.state):
-            if target_groups[i] <= st.groups_fetched:
+            tg = min(target_groups[i], self._limit(i))
+            if tg <= st.groups_fetched:
                 continue
             if st.groups_fetched == 0:
                 wants.append((i, -1))
-            wants.extend((i, g) for g in range(st.groups_fetched,
-                                               target_groups[i]))
+            wants.extend((i, g) for g in range(st.groups_fetched, tg))
         return wants
 
-    def _fetch_to(self, target_groups: List[int]) -> int:
+    def _fetch_to(self, target_groups: List[int],
+                  degrade: Optional[bool] = None) -> int:
         """Fetch segment deltas through the source; returns bytes fetched now.
 
         All newly-fetched segments of the request are decoded through ONE
@@ -177,18 +212,45 @@ class ProgressiveReader:
 
         Byte accounting uses the sizes recorded on ``ref`` (true byte-range
         lengths for store-backed stubs), so it reflects exactly what moved
-        over the backend."""
+        over the backend.
+
+        Failure policy: each segment fetch is independently guarded.  Under
+        ``degrade`` (per-call override, else the reader's policy) a typed
+        store failure CAPS the piece at the failed group — its prefix of
+        successfully fetched groups is still applied, later groups are
+        dropped, and the event is recorded in ``self.degraded``; planning
+        then never asks for the capped groups again, so ``current_bound()``
+        reports the honestly widened bound.  A sign-segment failure caps the
+        piece at 0 (nothing decodable without signs).  Without degrade the
+        error propagates and no state is mutated for the failed request."""
+        from repro.store import reliability as rl  # local: store imports us
         deltas = self.pending_deltas(target_groups)
         self.source.prefetch(deltas)
-        wants: List[Tuple[int, int, ll.Segment]] = [
-            (i, g, self.source.sign(i) if g < 0 else self.source.group(i, g))
-            for i, g in deltas]
+        if degrade is None:
+            degrade = self.degrade
+        wants: List[Tuple[int, int, ll.Segment]] = []
+        dead: set = set()  # pieces capped during THIS fetch
+        for i, g in deltas:
+            if i in dead:
+                continue  # later groups of a capped piece are unusable
+            try:
+                seg = self.source.sign(i) if g < 0 else self.source.group(i, g)
+            except (rl.StoreIOError, ValueError, OSError) as exc:
+                if not degrade:
+                    raise
+                cap = 0 if g < 0 else g
+                st = self.state[i]
+                st.cap = cap if st.cap is None else min(st.cap, cap)
+                self.degraded.append((i, g, type(exc).__name__))
+                dead.add(i)
+                continue
+            wants.append((i, g, seg))
         blobs = lb.decode_segments([w[2] for w in wants])
 
         fetched = 0
         decoded: dict = {(i, g): (s, b) for (i, g, s), b in zip(wants, blobs)}
         for i, (pm, st) in enumerate(zip(self.ref.pieces, self.state)):
-            tg = target_groups[i]
+            tg = min(target_groups[i], self._limit(i))
             if tg <= st.groups_fetched:
                 continue
             got = 0
@@ -231,7 +293,7 @@ class ProgressiveReader:
         best, best_score = None, -1.0
         for i, pm in enumerate(r.pieces):
             gi = self.state[i].groups_fetched
-            if gi >= len(pm.groups) or pm.n == 0:
+            if gi >= self._limit(i) or pm.n == 0:
                 continue
             new_kept = kept[i] + pm.group_planes[gi]
             d_eps = pm.weight * (r.piece_eps(i, kept[i]) - r.piece_eps(i, new_kept))

@@ -12,11 +12,18 @@ the RetrievalService.
     layout.DatasetStore    manifest + byte-range addressing
     backend.*              local-file / in-memory fetch, LRU cache, prefetch
     service.RetrievalService   sessions, batched decode, QoI serving
+    reliability.*          checksums, typed errors, retries, fault injection
 """
 from repro.store.backend import (BackendStats, CachingBackend, FetchBackend,
                                  InMemoryBackend, LocalFileBackend)
 from repro.store.layout import (ChunkEntry, DatasetStore, GroupRef,
                                 Manifest, PieceEntry, VariableEntry)
+from repro.store.reliability import (CorruptSegmentError, FatalStoreError,
+                                     FaultConfig, FaultInjectionBackend,
+                                     RetryingBackend, RetryPolicy,
+                                     StoreIOError, TransientFetchError,
+                                     TruncatedReadError,
+                                     UnreachableSegmentError)
 from repro.store.service import RetrievalService, StoreSegmentSource
 from repro.store.writer import DatasetWriter
 
@@ -24,5 +31,7 @@ __all__ = [
     "BackendStats", "CachingBackend", "FetchBackend", "InMemoryBackend",
     "LocalFileBackend", "ChunkEntry", "DatasetStore", "GroupRef", "Manifest",
     "PieceEntry", "VariableEntry", "RetrievalService", "StoreSegmentSource",
-    "DatasetWriter",
+    "DatasetWriter", "CorruptSegmentError", "FatalStoreError", "FaultConfig",
+    "FaultInjectionBackend", "RetryingBackend", "RetryPolicy", "StoreIOError",
+    "TransientFetchError", "TruncatedReadError", "UnreachableSegmentError",
 ]

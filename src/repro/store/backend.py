@@ -26,6 +26,7 @@ from typing import Dict, Optional, Tuple
 
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
+from repro.store import reliability as rl
 
 
 @dataclasses.dataclass
@@ -81,16 +82,30 @@ class LocalFileBackend(FetchBackend):
         return os.path.join(self.root, key)
 
     def read(self, key: str, offset: int, size: int) -> bytes:
-        # one pread per call: no shared seek state, safe across threads
+        # pread-only: no shared seek state, safe across threads
         with self._lock:
             f = self._files.get(key)
             if f is None:
                 f = open(self._path(key), "rb")
                 self._files[key] = f
         data = os.pread(f.fileno(), size, offset)
-        if len(data) != size:
-            raise IOError(f"short read: {key}@{offset}+{size} -> {len(data)}")
-        return data
+        if len(data) == size:
+            return data
+        # pread may legally return fewer bytes than asked (signals, pipes,
+        # network filesystems): loop until the range is filled, and raise a
+        # TYPED truncation error on EOF — a silently-short buffer would reach
+        # the decoders as subtly wrong data, not as a failure
+        parts = [data]
+        got = len(data)
+        while got < size:
+            chunk = os.pread(f.fileno(), size - got, offset + got)
+            if not chunk:
+                raise rl.TruncatedReadError(
+                    f"truncated read: {key}@{offset}+{size} ended at "
+                    f"{got} bytes (EOF inside the addressed range)")
+            parts.append(chunk)
+            got += len(chunk)
+        return b"".join(parts)
 
     def size(self, key: str) -> int:
         return os.path.getsize(self._path(key))
@@ -109,7 +124,9 @@ class InMemoryBackend(FetchBackend):
     def read(self, key: str, offset: int, size: int) -> bytes:
         buf = self.buffers[key]
         if offset + size > len(buf):
-            raise IOError(f"short read: {key}@{offset}+{size}")
+            raise rl.TruncatedReadError(
+                f"truncated read: {key}@{offset}+{size} beyond "
+                f"{len(buf)}-byte buffer")
         return bytes(buf[offset:offset + size])
 
     def size(self, key: str) -> int:
@@ -117,6 +134,18 @@ class InMemoryBackend(FetchBackend):
 
 
 _Range = Tuple[str, int, int]
+
+
+class _InFlight:
+    """One coalesced fetch: waiters block on ``event``; the owner publishes
+    either the cache insert or ``error`` BEFORE setting the event, so a
+    failed fetch propagates to every coalesced waiter instead of wedging
+    them or fanning out into a retry stampede of duplicate inner reads."""
+    __slots__ = ("event", "error")
+
+    def __init__(self):
+        self.event = threading.Event()
+        self.error: Optional[BaseException] = None
 
 
 class CachingBackend(FetchBackend):
@@ -132,7 +161,7 @@ class CachingBackend(FetchBackend):
         self._cache: "collections.OrderedDict[_Range, bytes]" = collections.OrderedDict()
         self._cached_bytes = 0
         self._lock = threading.Lock()
-        self._inflight: Dict[_Range, threading.Event] = {}
+        self._inflight: Dict[_Range, _InFlight] = {}
         self._queue: "collections.deque[_Range]" = collections.deque()
         self._queue_cv = threading.Condition(self._lock)
         self._closed = False
@@ -161,40 +190,52 @@ class CachingBackend(FetchBackend):
     def _fetch_into_cache(self, rng: _Range) -> Tuple[bytes, bool]:
         """Fetch ``rng`` from the inner backend, coalescing with any other
         thread already fetching the same range.  Returns (data, performed):
-        ``performed`` is True only when THIS call did the inner read."""
+        ``performed`` is True only when THIS call did the inner read.
+
+        Failure semantics: an inner read that raises publishes its exception
+        on the in-flight entry and clears the entry, so (a) every coalesced
+        waiter observes the SAME error instead of re-issuing the read, and
+        (b) the next caller starts a fresh fetch — errors are never cached."""
         key, off, size = rng
-        with self._lock:
-            data = self._lookup(rng)
-            if data is not None:
-                return data, False
-            ev = self._inflight.get(rng)
-            if ev is None:
-                ev = threading.Event()
-                self._inflight[rng] = ev
-                owner = True
-            else:
-                owner = False
-        if not owner:
-            ev.wait()
+        while True:
             with self._lock:
                 data = self._lookup(rng)
-            if data is not None:
-                return data, False
-            # evicted between completion and our lookup: fall through and own
-        try:
-            data = self.inner.read(key, off, size)
+                if data is not None:
+                    return data, False
+                fl = self._inflight.get(rng)
+                if fl is None:
+                    fl = self._inflight[rng] = _InFlight()
+                    owner = True
+                else:
+                    owner = False
+            if not owner:
+                fl.event.wait()
+                if fl.error is not None:
+                    raise fl.error
+                with self._lock:
+                    data = self._lookup(rng)
+                if data is not None:
+                    return data, False
+                continue  # evicted before our lookup: loop and try to own
+            try:
+                data = self.inner.read(key, off, size)
+            except BaseException as exc:
+                # publish-then-wake ordering: waiters read fl.error after
+                # event.wait(), so the error must be set before event.set()
+                fl.error = exc
+                with self._lock:
+                    self._inflight.pop(rng, None)
+                fl.event.set()
+                raise
+            # insert BEFORE waking waiters, so coalesced readers find the
+            # data in cache instead of re-reading the range themselves.
             with self._lock:
                 self.stats.fetches += 1
                 self.stats.bytes_fetched += size
                 self._insert(rng, data)
-        finally:
-            # insert BEFORE waking waiters, so coalesced readers find the
-            # data in cache instead of re-reading the range themselves.
-            if owner:
-                with self._lock:
-                    self._inflight.pop(rng, None)
-                ev.set()
-        return data, True
+                self._inflight.pop(rng, None)
+            fl.event.set()
+            return data, True
 
     def read(self, key: str, offset: int, size: int) -> bytes:
         rng = (key, offset, size)
@@ -235,14 +276,17 @@ class CachingBackend(FetchBackend):
             self._queue_cv.notify()
 
     def _worker(self) -> None:
+        # the worker must survive ANY per-item failure: prefetch is a hint,
+        # and a dead worker silently degrades every future prefetch.  Only
+        # the shutdown path (self._closed) exits the loop.
         while True:
-            with self._queue_cv:
-                while not self._queue and not self._closed:
-                    self._queue_cv.wait()
-                if self._closed:
-                    return
-                rng = self._queue.popleft()
             try:
+                with self._queue_cv:
+                    while not self._queue and not self._closed:
+                        self._queue_cv.wait()
+                    if self._closed:
+                        return
+                    rng = self._queue.popleft()
                 _, performed = self._fetch_into_cache(rng)
                 if performed:  # the prefetch itself moved the bytes
                     with self._lock:

@@ -28,6 +28,7 @@ from typing import Dict, List, Optional, Tuple
 from repro.core import lossless as ll
 from repro.core import refactor as rf
 from repro.store import backend as bk
+from repro.store import reliability as rl
 
 MANIFEST_NAME = "manifest.json"
 SEGMENT_DIR = "segments"
@@ -36,17 +37,30 @@ FORMAT = "repro.store/v1"
 
 @dataclasses.dataclass(frozen=True)
 class GroupRef:
-    """Byte-range address of one stored segment."""
+    """Byte-range address of one stored segment.
+
+    ``crc`` is the CRC-32 of the stored blob (``reliability.checksum``),
+    recorded at write time and verified on every backend read — so a flipped
+    byte anywhere in the range surfaces as a typed ``CorruptSegmentError``
+    at the exact (chunk, piece, group) that rotted, instead of as a decode
+    crash or (for dc/store-raw payloads, which have no framing of their own)
+    silently wrong data.  Compatibility mirrors ``shards``/``plan``: absent
+    (None, pre-checksum stores) means unchecked; serialized as an optional
+    4th list element that pre-checksum readers never look at."""
     offset: int
     size: int
     method: str
+    crc: Optional[int] = None
 
     def to_json(self) -> List:
-        return [self.offset, self.size, self.method]
+        if self.crc is None:
+            return [self.offset, self.size, self.method]
+        return [self.offset, self.size, self.method, self.crc]
 
     @staticmethod
     def from_json(j: List) -> "GroupRef":
-        return GroupRef(int(j[0]), int(j[1]), str(j[2]))
+        crc = int(j[3]) if len(j) > 3 and j[3] is not None else None
+        return GroupRef(int(j[0]), int(j[1]), str(j[2]), crc)
 
 
 @dataclasses.dataclass
@@ -180,26 +194,47 @@ class Manifest:
     def stored_bytes(self) -> int:
         return sum(v.stored_bytes for v in self.variables.values())
 
-    def to_json(self) -> Dict:
-        return {"format": FORMAT,
-                "variables": {k: v.to_json() for k, v in self.variables.items()}}
+    def to_json(self, integrity: bool = True) -> Dict:
+        """``integrity=True`` (what the writer commits) adds a ``"crc32"``
+        key over the canonical serialization of ``variables`` — a flipped
+        byte anywhere in the manifest body then fails ``from_json`` with a
+        typed error instead of silently rewriting offsets, sizes, or error-
+        model metadata.  Old readers ignore the unknown key (forward
+        compatible); manifests without it load unchecked (backward
+        compatible), same rules as ``shards``/``plan``."""
+        vars_json = {k: v.to_json() for k, v in self.variables.items()}
+        out = {"format": FORMAT, "variables": vars_json}
+        if integrity:
+            out["crc32"] = rl.manifest_body_checksum(vars_json)
+        return out
 
     @staticmethod
     def from_json(j: Dict) -> "Manifest":
         if j.get("format") != FORMAT:
             raise ValueError(f"unsupported store format: {j.get('format')!r}")
+        vars_json = j.get("variables", {})
+        if "crc32" in j:
+            got = rl.manifest_body_checksum(vars_json)
+            if got != (int(j["crc32"]) & 0xFFFFFFFF):
+                raise rl.CorruptSegmentError(
+                    f"manifest integrity check failed: stored "
+                    f"crc32=0x{int(j['crc32']) & 0xFFFFFFFF:08x}, computed "
+                    f"0x{got:08x} over the variables body")
         return Manifest({k: VariableEntry.from_json(v)
-                         for k, v in j.get("variables", {}).items()})
+                         for k, v in vars_json.items()})
 
 
 # --------------------------------------------------------------- chunk meta --
 
-def chunk_entry_from_refactored(refd: rf.Refactored, write) -> ChunkEntry:
+def chunk_entry_from_refactored(refd: rf.Refactored, write,
+                                checksums: bool = True) -> ChunkEntry:
     """Serialize one chunk's segments through ``write(blob) -> offset`` (an
     appending writer returning the blob's start offset) and build its entry.
 
     Uses the canonical ``rf.iter_segments`` stream order, so offsets address
     the same bytes ``refactored_to_bytes`` would have produced segment-wise.
+    ``checksums=True`` records each blob's CRC-32 on its ``GroupRef`` so
+    readers verify every byte-range read (see ``repro.store.reliability``).
     """
     meta = rf.refactored_meta(refd)
     refs: List[List[Optional[GroupRef]]] = [
@@ -208,7 +243,8 @@ def chunk_entry_from_refactored(refd: rf.Refactored, write) -> ChunkEntry:
         blob = seg.to_bytes()
         off = write(blob)
         slot = 0 if kind == "sign" else 1 + gi
-        refs[pi][slot] = GroupRef(off, len(blob), seg.method)
+        refs[pi][slot] = GroupRef(off, len(blob), seg.method,
+                                  rl.checksum(blob) if checksums else None)
     pieces = []
     for pi, pm in enumerate(meta["pieces"]):
         pieces.append(PieceEntry(
@@ -252,22 +288,34 @@ class DatasetStore:
 
     ``backend`` is any ``repro.store.backend.FetchBackend``; by default a
     ``LocalFileBackend`` rooted at the store directory wrapped in a
-    ``CachingBackend`` (LRU segment cache + async prefetch queue)."""
+    ``CachingBackend`` (LRU segment cache + async prefetch queue).  When the
+    ``REPRO_CHAOS`` env var is set (the CI chaos job), the default file
+    backend is additionally wrapped in a seeded ``FaultInjectionBackend`` +
+    ``RetryingBackend`` — so ordinary test suites exercise the whole read
+    stack under injected faults with zero test changes.
 
-    def __init__(self, manifest: Manifest, backend: bk.FetchBackend):
+    ``verify=True`` (default) checks the recorded CRC-32 of every segment
+    read (``GroupRef.crc``); pre-checksum stores carry no CRCs and read
+    unchecked, exactly as before."""
+
+    def __init__(self, manifest: Manifest, backend: bk.FetchBackend,
+                 verify: bool = True):
         self.manifest = manifest
         self.backend = backend
+        self.verify = verify
 
     @classmethod
     def open(cls, root: str, backend: Optional[bk.FetchBackend] = None,
              cache_bytes: int = 64 << 20,
-             prefetch_workers: int = 2) -> "DatasetStore":
+             prefetch_workers: int = 2, verify: bool = True) -> "DatasetStore":
         if backend is None:
-            backend = bk.CachingBackend(bk.LocalFileBackend(root),
-                                        capacity_bytes=cache_bytes,
-                                        workers=prefetch_workers)
+            backend = bk.CachingBackend(
+                rl.chaos_from_env(bk.LocalFileBackend(root)),
+                capacity_bytes=cache_bytes,
+                workers=prefetch_workers)
         raw = backend.read(MANIFEST_NAME, 0, backend.size(MANIFEST_NAME))
-        return cls(Manifest.from_json(json.loads(raw.decode())), backend)
+        return cls(Manifest.from_json(json.loads(raw.decode())), backend,
+                   verify=verify)
 
     @property
     def variables(self) -> List[str]:
@@ -284,6 +332,14 @@ class DatasetStore:
     def read_segment(self, var: str, ref_: GroupRef) -> ll.Segment:
         v = self.manifest.variables[var]
         blob = self.backend.read(v.segment_file, ref_.offset, ref_.size)
+        if len(blob) != ref_.size:
+            raise rl.TruncatedReadError(
+                f"backend returned {len(blob)} bytes for "
+                f"{v.segment_file}@{ref_.offset}+{ref_.size}")
+        if self.verify and ref_.crc is not None:
+            rl.verify_checksum(
+                blob, ref_.crc,
+                context=f"{v.segment_file}@{ref_.offset}+{ref_.size}")
         return ll.Segment.from_bytes(blob)
 
     def prefetch_segment(self, var: str, ref_: GroupRef) -> None:

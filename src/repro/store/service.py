@@ -70,15 +70,21 @@ class StoreSegmentSource(SegmentSource):
     def warm(self, wants: List[Tuple[int, int]]) -> int:
         """Synchronously pull the ranges into the backend cache (the overlap
         feeder's I/O stage).  No-op on cache-less backends, where the read
-        would be discarded and the real fetch would re-issue it.  Returns
-        bytes read."""
+        would be discarded and the real fetch would re-issue it.  Best-effort:
+        a failing range is skipped — warming is a cache hint, and the real
+        fetch in ``_fetch_to`` is where failure policy (retry exhaustion,
+        degradation) is decided.  Returns bytes read."""
         if not getattr(self._store.backend, "caches", False):
             return 0
         total = 0
         for piece, group in wants:
             ref_ = self._ref(piece, group)
-            self._store.backend.read(self._store.variable(self._var).segment_file,
-                                     ref_.offset, ref_.size)
+            try:
+                self._store.backend.read(
+                    self._store.variable(self._var).segment_file,
+                    ref_.offset, ref_.size)
+            except Exception:  # noqa: BLE001 - warming is best-effort
+                continue
             total += ref_.size
         return total
 
@@ -132,7 +138,8 @@ class StoreVariableReader:
     # debugging against the engine, not for serving.
     def __init__(self, store: lo.DatasetStore, name: str,
                  backend: Optional[str] = None, incremental: bool = True,
-                 depth: Optional[int] = None, mesh: shd.MeshLike = None):
+                 depth: Optional[int] = None, mesh: shd.MeshLike = None,
+                 degrade: bool = False):
         var = store.variable(name)
         self.var = var
         self.name = name
@@ -151,12 +158,13 @@ class StoreVariableReader:
         # the variable was written sharded) taken modulo this mesh's size,
         # else round-robin; mesh=None keeps every engine uncommitted
         self.sharded = shd.ShardedReconstructEngine(mesh, shards=var.shards)
+        self.degrade = degrade
         self.chunk_readers = [
             ProgressiveReader(lo.chunk_refactored(var, ci),
                               source=StoreSegmentSource(store, name, ci),
                               incremental=incremental,
                               device=self.sharded.device_for(ci),
-                              config=cfg)
+                              config=cfg, degrade=degrade)
             for ci in range(len(var.chunks))]
         self.ref = _VarRef(var, self.chunk_readers)
         # assembled-variable cache, keyed on the fetch signature; per-chunk
@@ -205,6 +213,21 @@ class StoreVariableReader:
 
     def delta_decoded_bytes(self) -> int:
         return sum(r.delta_decoded_bytes() for r in self.chunk_readers)
+
+    @property
+    def degraded_count(self) -> int:
+        """Plane groups dropped by the degrade policy across all chunks."""
+        return sum(r.degraded_count for r in self.chunk_readers)
+
+    @property
+    def degraded(self) -> List[Tuple[int, int, int, str]]:
+        """(chunk, piece, group, errtype) degradation events, all chunks."""
+        return [(ci, p, g, e) for ci, r in enumerate(self.chunk_readers)
+                for (p, g, e) in r.degraded]
+
+    def reset_degraded(self) -> None:
+        for r in self.chunk_readers:
+            r.reset_degraded()
 
     # -- retrieval -----------------------------------------------------------
     def _assemble(self, outs: List[Tuple[jax.Array, float]]
@@ -288,6 +311,9 @@ class SessionStats:
     requests: int = 0
     bytes_fetched: int = 0
     qoi_iterations: int = 0
+    # plane groups served WITHOUT their data under the degrade policy —
+    # every one of these widened some returned bound
+    degraded_groups: int = 0
 
 
 class Session:
@@ -308,9 +334,19 @@ class Session:
                                     self.service.backend,
                                     incremental=self.service.incremental,
                                     depth=self.service.depth,
-                                    mesh=self.service.mesh)
+                                    mesh=self.service.mesh,
+                                    degrade=self.service.degrade)
             self._readers[var] = r
         return r
+
+    def _record_degraded(self, readers: Sequence[StoreVariableReader],
+                         before: int) -> int:
+        """Fold NEW degradation events since ``before`` into stats/metrics."""
+        delta = sum(r.degraded_count for r in readers) - before
+        if delta > 0:
+            self.stats.degraded_groups += delta
+            obs_metrics.REGISTRY.get().inc("serve.degraded_groups", delta)
+        return delta
 
     @property
     def bytes_fetched(self) -> int:
@@ -322,9 +358,11 @@ class Session:
         t0 = time.perf_counter()
         with obs_trace.span("serve.retrieve", session=self.sid, var=var):
             r = self.reader(var)
+            deg_before = r.degraded_count
             x, bound, fetched = r.retrieve(tol, relative=relative)
         self.stats.requests += 1
         self.stats.bytes_fetched += fetched
+        self._record_degraded([r], deg_before)
         m = obs_metrics.REGISTRY.get()
         m.inc("serve.requests")
         m.inc("serve.bytes_fetched", fetched)
@@ -337,11 +375,13 @@ class Session:
         session state persists, so tightening tau is incremental too."""
         readers = [self.reader(v) for v in variables]
         before = sum(r.total_bytes_fetched for r in readers)
+        deg_before = sum(r.degraded_count for r in readers)
         res = qq.progressive_qoi_retrieve(readers, q, tau, method=method, **kw)
         self.stats.requests += 1
         self.stats.qoi_iterations += res.iterations
         self.stats.bytes_fetched += sum(
             r.total_bytes_fetched for r in readers) - before
+        self._record_degraded(readers, deg_before)
         return res
 
 
@@ -350,13 +390,16 @@ class RetrievalService:
 
     def __init__(self, store: lo.DatasetStore, backend: Optional[str] = None,
                  incremental: bool = True, depth: Optional[int] = None,
-                 mesh: shd.MeshLike = None):
+                 mesh: shd.MeshLike = None, degrade: bool = False):
         self.store = store
         # None lets each variable reader replay its manifest plan (tuned
         # decode knobs); an explicit value overrides the plan for every var
         self.backend = backend
         self.incremental = incremental
         self.depth = depth
+        # degrade=True: unreachable plane groups widen the served bound
+        # instead of failing the request (see docs/reliability.md)
+        self.degrade = degrade
         # mesh-sharded serving: every session's variable readers place their
         # chunk engines across this mesh's devices (core.sharded)
         self.mesh = shd.resolve_mesh(mesh)
@@ -405,7 +448,8 @@ class RetrievalService:
             first = ent is None
             if first:
                 ent = {"session": session, "vr": vr,
-                       "before": vr.total_bytes_fetched}
+                       "before": vr.total_bytes_fetched,
+                       "deg_before": vr.degraded_count}
                 uniq[id(vr)] = ent
             req_entries.append((ent, first))
             for r in vr.chunk_readers:
@@ -437,6 +481,8 @@ class RetrievalService:
                     if first else 0
                 ent["session"].stats.requests += 1
                 ent["session"].stats.bytes_fetched += fetched
+                if first:
+                    ent["session"]._record_degraded([vr], ent["deg_before"])
                 results.append((x, bound, fetched))
         m = obs_metrics.REGISTRY.get()
         m.inc("serve.requests", len(requests))

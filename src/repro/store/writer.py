@@ -72,7 +72,8 @@ class DatasetWriter:
                  fused: bool = True, dispatch_ahead: Optional[int] = None,
                  mesh: shd.MeshLike = None,
                  config: Optional[tn.RefactorConfig] = None,
-                 use_tune_cache: bool = True):
+                 use_tune_cache: bool = True,
+                 checksums: bool = True):
         self.root = root
         self.chunk_elems = int(chunk_elems)
         self.levels = levels
@@ -93,6 +94,9 @@ class DatasetWriter:
         self.dispatch_ahead = dispatch_ahead
         self.config = config
         self.use_tune_cache = use_tune_cache
+        # per-(chunk, piece, group) CRCs in the manifest; False writes a
+        # pre-integrity store (old readers are unaffected either way)
+        self.checksums = checksums
         # mesh-sharded write (core.sharded): chunks round-robin across the
         # mesh's devices; the chunk -> shard map is recorded per variable in
         # the manifest.  Payload bytes are placement-independent (the
@@ -138,7 +142,8 @@ class DatasetWriter:
         def sink(ci: int, refd: rf.Refactored) -> bytes:
             # chunks reach the sink in index order (pipeline contract), so
             # append order == chunk order and offsets are deterministic.
-            chunks.append(lo.chunk_entry_from_refactored(refd, seg_writer.write))
+            chunks.append(lo.chunk_entry_from_refactored(
+                refd, seg_writer.write, checksums=self.checksums))
             return b""  # the pipeline's blob list is unused on this path
 
         pipe = pl.ChunkedRefactorPipeline(

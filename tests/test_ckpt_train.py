@@ -74,6 +74,58 @@ def test_async_checkpointer(tmp_path):
     assert ck.latest_step(tmp_path) == 5
 
 
+def test_save_sweeps_stale_tmp_dirs(tmp_path):
+    """A crashed save leaves .tmp_step_M behind; the NEXT save (any step)
+    must clean it up instead of leaking a checkpoint of disk per crash."""
+    tree = {"w": jnp.ones((64,), jnp.float32)}
+    stale = tmp_path / ".tmp_step_00000007"
+    stale.mkdir(parents=True)
+    (stale / "w.raw").write_bytes(b"\0" * 256)  # half-written leftovers
+    ck.save(tmp_path, 9, tree)
+    assert not stale.exists()
+    assert ck.latest_step(tmp_path) == 9
+    loaded, _ = ck.load(tmp_path, 9, tree)
+    assert np.array_equal(np.asarray(loaded["w"]), np.asarray(tree["w"]))
+
+
+def test_mid_save_crash_leaves_previous_checkpoint_loadable(tmp_path, monkeypatch):
+    """Atomicity under a crash DURING save: the interrupted step never
+    becomes latest, the previous checkpoint still loads bit-exactly, and the
+    recovery save cleans the wreckage."""
+    rng = np.random.default_rng(4)
+    tree1 = {"w": jnp.asarray(rng.normal(size=(2048,)).astype(np.float32))}
+    tree2 = {"w": jnp.asarray(rng.normal(size=(2048,)).astype(np.float32))}
+    ck.save(tmp_path, 1, tree1)
+
+    calls = {"n": 0}
+    real_write_bytes = ck.Path.write_bytes
+
+    def crashing_write_bytes(self, data):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            # simulate dying mid-write: leave a partial file, then raise
+            real_write_bytes(self, data[: len(data) // 2])
+            raise RuntimeError("simulated crash mid-save")
+        return real_write_bytes(self, data)
+
+    monkeypatch.setattr(ck.Path, "write_bytes", crashing_write_bytes)
+    with pytest.raises(RuntimeError):
+        ck.save(tmp_path, 2, tree2)
+    monkeypatch.setattr(ck.Path, "write_bytes", real_write_bytes)
+    # the torn step is invisible (no manifest => not a checkpoint) and the
+    # previous one is intact
+    assert ck.latest_step(tmp_path) == 1
+    loaded, _ = ck.load(tmp_path, 1, tree1)
+    assert np.array_equal(np.asarray(loaded["w"]), np.asarray(tree1["w"]))
+    # wreckage exists now, and the next successful save sweeps it
+    assert (tmp_path / ".tmp_step_00000002").exists()
+    ck.save(tmp_path, 3, tree2)
+    assert not (tmp_path / ".tmp_step_00000002").exists()
+    assert ck.latest_step(tmp_path) == 3
+    loaded3, _ = ck.load(tmp_path, 3, tree2)
+    assert np.array_equal(np.asarray(loaded3["w"]), np.asarray(tree2["w"]))
+
+
 # ----------------------------------------------------------------- trainer --
 
 def _mk_trainer(tmp_path, total=30, crash=None, planes=0, straggle=False):
