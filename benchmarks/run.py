@@ -8,6 +8,9 @@
             roofline + measured probes, peaks from repro.tune.cost)
   (ours)    store_serving (cold/warm cache, sessions, bytes-vs-tol; also
             writes out/benchmarks/store_serving.json)
+  (ours)    serving_load (open-loop Zipf load generator against the serving
+            tier: hit-path speedup, p50/p99, cache-hit + coalesced ratios;
+            writes out/benchmarks/serving_load.json)
   (ours)    autotune_smoke (repro.tune search + cache-hit replay + store
             plan round-trip; writes out/benchmarks/autotune_smoke.json)
 
@@ -36,6 +39,7 @@ MODULES = [
     "qoi_benchmarks",
     "grad_compress_bench",
     "store_serving",
+    "serving_load",
     "autotune_smoke",
     "roofline",
 ]

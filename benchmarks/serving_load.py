@@ -1,0 +1,269 @@
+"""Serving-tier load generator: the RetrievalService under open-loop traffic.
+
+Drives the high-concurrency serving tier (docs/serving.md) the way a real
+deployment would see it, and measures what the tier is for:
+
+  * **hit-path speedup** — a 64-session burst retrieving one hot variable,
+    private per-session decode (``serving=False``) vs. the shared tier's
+    plane-cache hit path.  This is the headline number: decode amortization
+    across sessions.
+  * **open-loop Zipf load** at several session counts — each session is a
+    thread with its own pre-drawn arrival schedule (exponential
+    inter-arrivals, issued on schedule regardless of completion, so queueing
+    delay is *measured*, not hidden), picking variables Zipf(1.1)-skewed,
+    with a mixed op profile: plain retrieves, tolerance-tightening revisits
+    (a session's repeat visit to a variable steps down a tolerance ladder),
+    and a fraction of QoI retrievals.  Reports p50/p99 latency from the
+    *scheduled* arrival, plane-cache hit rate, coalesced-work ratio, and
+    backend bytes moved.
+
+Everything is seeded: the schedule, variable choice, and op mix are
+deterministic; only thread interleaving varies run to run (which is the
+point — the invariants the tier guarantees hold under ANY interleaving).
+
+Writes ``out/benchmarks/serving_load.json`` (+ Chrome trace via the obs
+scope ``run.py`` installs); CI gates budgets on it in the dedicated
+``serving-load`` job and the ``bench`` job's shared regression gate.
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+import threading
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import row, write_json
+from repro.data.fields import gaussian_field
+from repro.store import (CachingBackend, DatasetStore, DatasetWriter,
+                         LocalFileBackend, RetrievalService)
+from repro.core import qoi as qq
+
+#: relative-tolerance ladder a session steps down on repeat visits
+TOL_LADDER = [1e-1, 1e-2, 1e-3]
+ZIPF_S = 1.1
+QOI_FRACTION = 0.1
+REQUESTS_PER_SESSION = 5
+MEAN_GAP_S = 0.05
+BURST_SESSIONS = 64
+SESSION_COUNTS = (8, 32, 64)
+
+
+def _write_store(root: str, shape, n_vars: int, chunk_elems: int) -> List[str]:
+    names = [f"v{i}" for i in range(n_vars)]
+    with DatasetWriter(root, chunk_elems=chunk_elems) as w:
+        for i, name in enumerate(names):
+            w.write(name, gaussian_field(shape, slope=-2.0, seed=100 + i))
+    return names
+
+
+def _open(root: str) -> DatasetStore:
+    return DatasetStore.open(root,
+                             backend=CachingBackend(LocalFileBackend(root)))
+
+
+def _percentiles(lat_s: List[float]) -> Dict[str, float]:
+    a = np.asarray(lat_s, dtype=np.float64) * 1e3
+    return {"p50_ms": float(np.percentile(a, 50)),
+            "p99_ms": float(np.percentile(a, 99)),
+            "mean_ms": float(a.mean()), "max_ms": float(a.max()),
+            "n": int(a.size)}
+
+
+# ------------------------------------------------------------ burst speedup --
+
+def _burst(svc: RetrievalService, var: str, tol: float, n: int
+           ) -> List[float]:
+    """n sessions, one barrier, one retrieve each; per-request latencies."""
+    sessions = [svc.open_session() for _ in range(n)]
+    lat = [0.0] * n
+    errs: List[BaseException] = []
+    barrier = threading.Barrier(n)
+
+    def run_one(k: int) -> None:
+        barrier.wait()
+        t0 = time.perf_counter()
+        try:
+            sessions[k].retrieve(var, tol, relative=True)
+        except BaseException as exc:  # noqa: BLE001 - fail the bench loudly
+            errs.append(exc)
+        lat[k] = time.perf_counter() - t0
+
+    ts = [threading.Thread(target=run_one, args=(k,)) for k in range(n)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    if errs:
+        raise errs[0]
+    return lat
+
+
+def _measure_speedup(root: str, var: str) -> Dict[str, object]:
+    tol = TOL_LADDER[1]
+    # cold per-session decode: every session privately fetches + decodes
+    private = RetrievalService(_open(root), serving=False)
+    lat_cold = _burst(private, var, tol, BURST_SESSIONS)
+    # shared hit path: one session populates the plane cache, then the
+    # burst rides it — claims resolve to hits, sessions only OR-apply
+    shared = RetrievalService(_open(root))
+    shared.open_session().retrieve(var, tol, relative=True)
+    lat_hit = _burst(shared, var, tol, BURST_SESSIONS)
+    snap = shared.stats()["serving"]
+    return {
+        "sessions": BURST_SESSIONS, "tol": tol,
+        "cold_private": _percentiles(lat_cold),
+        "hit_shared": _percentiles(lat_hit),
+        "speedup_mean": (float(np.mean(lat_cold))
+                         / max(float(np.mean(lat_hit)), 1e-9)),
+        "speedup_p99": (float(np.percentile(lat_cold, 99))
+                        / max(float(np.percentile(lat_hit, 99)), 1e-9)),
+        "serving": {k: snap[k] for k in
+                    ("requests", "plane_hits", "coalesced", "decoded",
+                     "hit_rate", "shared_ratio")},
+    }
+
+
+# ------------------------------------------------------- open-loop Zipf load --
+
+def _make_schedule(rng: np.random.Generator, n_sessions: int,
+                   names: List[str]) -> List[List[dict]]:
+    """Pre-drawn per-session request schedules (open-loop arrivals)."""
+    ranks = np.arange(1, len(names) + 1, dtype=np.float64)
+    weights = ranks ** -ZIPF_S
+    weights /= weights.sum()
+    schedules = []
+    for _ in range(n_sessions):
+        t = 0.0
+        reqs = []
+        visits: Dict[str, int] = {}
+        for _ in range(REQUESTS_PER_SESSION):
+            t += float(rng.exponential(MEAN_GAP_S))
+            var = names[int(rng.choice(len(names), p=weights))]
+            step = visits.get(var, 0)
+            visits[var] = step + 1
+            # revisits tighten: the tolerance-tightening traffic shape
+            tol = TOL_LADDER[min(step, len(TOL_LADDER) - 1)]
+            op = "qoi" if rng.random() < QOI_FRACTION else "retrieve"
+            reqs.append({"at": t, "var": var, "tol": tol, "op": op})
+        schedules.append(reqs)
+    return schedules
+
+
+def _run_load(root: str, names: List[str], n_sessions: int, seed: int
+              ) -> Dict[str, object]:
+    svc = RetrievalService(_open(root))
+    schedules = _make_schedule(np.random.default_rng(seed), n_sessions, names)
+    lat: List[float] = []
+    lat_lock = threading.Lock()
+    errs: List[BaseException] = []
+    barrier = threading.Barrier(n_sessions)
+    ranges = {n: float(svc.store.variable(n).range) for n in names}
+    amaxes = {n: float(svc.store.variable(n).amax) for n in names}
+
+    def client(k: int) -> None:
+        s = svc.open_session()
+        barrier.wait()
+        t0 = time.perf_counter()
+        try:
+            for req in schedules[k]:
+                # open-loop: issue on schedule; latency counts from the
+                # SCHEDULED arrival, so queueing delay is included
+                delay = req["at"] - (time.perf_counter() - t0)
+                if delay > 0:
+                    time.sleep(delay)
+                if req["op"] == "qoi":
+                    tau = 0.1 * amaxes[req["var"]] * ranges[req["var"]]
+                    s.retrieve_qoi([req["var"]], qq.V_TOTAL, tau)
+                else:
+                    s.retrieve(req["var"], req["tol"], relative=True)
+                done = time.perf_counter() - t0
+                with lat_lock:
+                    lat.append(done - req["at"])
+        except BaseException as exc:  # noqa: BLE001
+            errs.append(exc)
+        finally:
+            svc.close_session(s)
+
+    ts = [threading.Thread(target=client, args=(k,)) for k in range(n_sessions)]
+    t_start = time.perf_counter()
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    wall = time.perf_counter() - t_start
+    if errs:
+        raise errs[0]
+    stats = svc.stats()
+    tier, be = stats["serving"], stats["backend"]
+    return {
+        "sessions": n_sessions,
+        "requests": len(lat),
+        "wall_s": wall,
+        "latency": _percentiles(lat),
+        "serving": {k: tier[k] for k in
+                    ("requests", "plane_hits", "coalesced", "decoded",
+                     "decode_rounds", "decode_batches", "hit_rate",
+                     "shared_ratio", "admitted", "evictions",
+                     "errors_propagated")},
+        "backend": {k: be[k] for k in
+                    ("fetches", "bytes_fetched", "reads", "bytes_served",
+                     "hit_rate")},
+    }
+
+
+# --------------------------------------------------------------------- main --
+
+def run(shape=(16, 16, 16), n_vars=6, chunk_elems=3000,
+        session_counts=SESSION_COUNTS) -> list:
+    lines = []
+    root = tempfile.mkdtemp(prefix="serving_load_")
+    try:
+        names = _write_store(root, shape, n_vars, chunk_elems)
+        # warmup: compile the decode/QoI kernel shapes once, OUTSIDE the
+        # measured windows — the load numbers should show serving behavior,
+        # not first-touch jit latency (which any long-lived service pays
+        # exactly once)
+        wsvc = RetrievalService(_open(root))
+        ws = wsvc.open_session()
+        for tol in TOL_LADDER:
+            ws.retrieve(names[0], tol, relative=True)
+        v0 = wsvc.store.variable(names[0])
+        ws.retrieve_qoi([names[0]], qq.V_TOTAL,
+                        0.1 * float(v0.amax) * float(v0.range))
+        result: Dict[str, object] = {
+            "shape": list(shape), "n_vars": n_vars,
+            "chunk_elems": chunk_elems, "zipf_s": ZIPF_S,
+            "qoi_fraction": QOI_FRACTION,
+            "requests_per_session": REQUESTS_PER_SESSION,
+        }
+
+        burst = _measure_speedup(root, names[0])
+        result["burst"] = burst
+        lines.append(row(
+            "serving_hit_path", np.mean(burst["hit_shared"]["mean_ms"]) / 1e3,
+            f"speedup={burst['speedup_mean']:.2f}x"
+            f";hit_rate={burst['serving']['hit_rate']:.3f}"))
+
+        result["load"] = []
+        for i, n in enumerate(session_counts):
+            r = _run_load(root, names, n, seed=42 + i)
+            result["load"].append(r)
+            lines.append(row(
+                f"serving_load_{n}", r["latency"]["p50_ms"] / 1e3,
+                f"p99={r['latency']['p99_ms']:.1f}ms"
+                f";hit_rate={r['serving']['hit_rate']:.3f}"
+                f";shared={r['serving']['shared_ratio']:.3f}"
+                f";MB={r['backend']['bytes_fetched'] / 1e6:.2f}"))
+
+        write_json("serving_load", result)
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    return lines
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

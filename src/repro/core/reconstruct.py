@@ -148,6 +148,13 @@ class IncrementalReconstructor:
         self._dirty: set = set()
         self._pending: List[_PendingRows] = []
         self._pending_sign: List[Tuple[int, jax.Array]] = []
+        # serving-tier mode (repro.store.serving): staged work is a list of
+        # (kind, piece, future) whose decoded plane groups arrive from the
+        # SHARED cross-session decoder instead of this engine's private
+        # kernel batch.  ``shared`` is the owning ServingTier (duck-typed —
+        # core never imports store); drained via ``shared.drain_engines``.
+        self.shared = None
+        self._shared_pending: List[Tuple[str, int, object]] = []
         # recompose level cache: _levels[0] = reshaped corner, _levels[i] =
         # state after merging detail piece i; x_hat = _levels[levels]
         self._levels: Optional[List[jax.Array]] = None
@@ -174,6 +181,17 @@ class IncrementalReconstructor:
             return
         self._pending.append(_PendingRows(
             piece, self._upload(rows), row_offset))
+        STATS.add(groups_staged=1)
+
+    def stage_shared(self, kind: str, piece: int, fut) -> None:
+        """Register a serving-tier decode future (``kind`` is "sign" or
+        "group").  The decoded planes are produced (or cache-served) by the
+        shared tier and OR-applied at drain time — same exactness argument
+        as private staging: magnitude accumulation over disjoint bit ranges
+        commutes, so apply order across sessions does not matter."""
+        if self.ref.pieces[piece].n == 0:
+            return
+        self._shared_pending.append((kind, piece, fut))
         STATS.add(groups_staged=1)
 
     def _take_pending(self) -> List[_PendingRows]:
@@ -211,7 +229,7 @@ class IncrementalReconstructor:
         Decodes any still-pending plane groups (batched), align-decodes only
         the changed pieces, and re-runs only the recompose suffix below the
         coarsest changed piece; a clean engine returns the cached array."""
-        if self._pending or self._pending_sign:
+        if self._pending or self._pending_sign or self._shared_pending:
             batch_apply_pending([self])
         r = self.ref
         if not self._dirty and self._levels is not None:
@@ -253,6 +271,17 @@ def batch_apply_pending(engines: Sequence[IncrementalReconstructor]) -> None:
     batch the same way.  Decoded magnitudes are OR-accumulated into each
     engine's device state; no host sync happens here."""
     from repro.kernels import ops as kops  # local: keeps import graph flat
+
+    # serving-tier engines first: their staged futures resolve through the
+    # SHARED cross-session decoder (one combined, fairness-bounded batch per
+    # tier), then each result is OR-applied into its engine.  Grouped by
+    # tier so one drain merges every engine's futures into one pump.
+    tiers: Dict[int, Tuple[object, List[IncrementalReconstructor]]] = {}
+    for e in engines:
+        if e._shared_pending and e.shared is not None:
+            tiers.setdefault(id(e.shared), (e.shared, []))[1].append(e)
+    for tier, tier_engines in tiers.values():
+        tier.drain_engines(tier_engines)
 
     jobs: List[Tuple[IncrementalReconstructor, _PendingRows]] = [
         (e, p) for e in engines for p in e._take_pending()]

@@ -12,10 +12,13 @@ the RetrievalService.
     layout.DatasetStore    manifest + byte-range addressing
     backend.*              local-file / in-memory fetch, LRU cache, prefetch
     service.RetrievalService   sessions, batched decode, QoI serving
+    serving.ServingTier    shared plane cache, coalescing, batched decode
     reliability.*          checksums, typed errors, retries, fault injection
 """
 from repro.store.backend import (BackendStats, CachingBackend, FetchBackend,
                                  InMemoryBackend, LocalFileBackend)
+from repro.store.serving import (DecodedPlanes, PlaneCache, ServingStats,
+                                 ServingTier)
 from repro.store.layout import (ChunkEntry, DatasetStore, GroupRef,
                                 Manifest, PieceEntry, VariableEntry)
 from repro.store.reliability import (CorruptSegmentError, FatalStoreError,
@@ -34,4 +37,5 @@ __all__ = [
     "DatasetWriter", "CorruptSegmentError", "FatalStoreError", "FaultConfig",
     "FaultInjectionBackend", "RetryingBackend", "RetryPolicy", "StoreIOError",
     "TransientFetchError", "TruncatedReadError", "UnreachableSegmentError",
+    "DecodedPlanes", "PlaneCache", "ServingStats", "ServingTier",
 ]

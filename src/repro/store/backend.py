@@ -31,9 +31,14 @@ from repro.store import reliability as rl
 
 @dataclasses.dataclass
 class BackendStats:
-    """Byte accounting. ``bytes_fetched`` counts only bytes that actually
-    moved from the underlying storage (cache misses + prefetches); cache
-    hits count toward ``bytes_served`` alone."""
+    """Byte accounting (thread-safe). ``bytes_fetched`` counts only bytes
+    that actually moved from the underlying storage (cache misses +
+    prefetches); cache hits count toward ``bytes_served`` alone.
+
+    ``add`` applies one event's counter deltas atomically and ``snapshot``
+    reads every field under the same lock, so a snapshot taken while other
+    threads serve reads is internally consistent — never e.g. a read counted
+    with its served bytes missing (the historical torn-read race)."""
     reads: int = 0
     bytes_served: int = 0
     fetches: int = 0
@@ -42,6 +47,16 @@ class BackendStats:
     cache_misses: int = 0
     prefetch_issued: int = 0
     prefetch_useful: int = 0
+    # prefetch hints shed by the bounded queue (oldest-first) under bursts
+    prefetch_dropped: int = 0
+
+    def __post_init__(self):
+        self._lock = threading.Lock()
+
+    def add(self, **kw: int) -> None:
+        with self._lock:
+            for k, v in kw.items():
+                setattr(self, k, getattr(self, k) + v)
 
     @property
     def hit_rate(self) -> float:
@@ -49,7 +64,12 @@ class BackendStats:
         return self.cache_hits / total if total else 0.0
 
     def snapshot(self) -> Dict[str, float]:
-        return {**dataclasses.asdict(self), "hit_rate": self.hit_rate}
+        with self._lock:
+            out = {f.name: getattr(self, f.name)
+                   for f in dataclasses.fields(self)}
+        total = out["cache_hits"] + out["cache_misses"]
+        out["hit_rate"] = out["cache_hits"] / total if total else 0.0
+        return out
 
 
 class FetchBackend:
@@ -154,7 +174,7 @@ class CachingBackend(FetchBackend):
     caches = True
 
     def __init__(self, inner: FetchBackend, capacity_bytes: int = 64 << 20,
-                 workers: int = 2):
+                 workers: int = 2, prefetch_queue_max: int = 512):
         self.inner = inner
         self.capacity_bytes = capacity_bytes
         self.stats = BackendStats()
@@ -163,6 +183,10 @@ class CachingBackend(FetchBackend):
         self._lock = threading.Lock()
         self._inflight: Dict[_Range, _InFlight] = {}
         self._queue: "collections.deque[_Range]" = collections.deque()
+        # bounded: a prefetch storm (many sessions hinting at once) must not
+        # grow the queue without limit — the oldest hints are the stalest,
+        # so they are shed first (counted as ``prefetch_dropped``)
+        self._queue_max = max(int(prefetch_queue_max), 1)
         self._queue_cv = threading.Condition(self._lock)
         self._closed = False
         self._workers = [threading.Thread(target=self._worker, daemon=True)
@@ -229,9 +253,8 @@ class CachingBackend(FetchBackend):
                 raise
             # insert BEFORE waking waiters, so coalesced readers find the
             # data in cache instead of re-reading the range themselves.
+            self.stats.add(fetches=1, bytes_fetched=size)
             with self._lock:
-                self.stats.fetches += 1
-                self.stats.bytes_fetched += size
                 self._insert(rng, data)
                 self._inflight.pop(rng, None)
             fl.event.set()
@@ -241,14 +264,10 @@ class CachingBackend(FetchBackend):
         rng = (key, offset, size)
         m = obs_metrics.REGISTRY.get()
         with self._lock:
-            self.stats.reads += 1
-            self.stats.bytes_served += size
             data = self._lookup(rng)
-            if data is not None:
-                self.stats.cache_hits += 1
-            else:
-                self.stats.cache_misses += 1
         hit = data is not None
+        self.stats.add(reads=1, bytes_served=size,
+                       **({"cache_hits": 1} if hit else {"cache_misses": 1}))
         obs_trace.event(obs_trace.EV_BACKEND_READ, key=key, bytes=size,
                         hit=hit)
         m.inc("backend.bytes_served", size)
@@ -268,12 +287,19 @@ class CachingBackend(FetchBackend):
         if not self._workers:
             return
         rng = (key, offset, size)
+        dropped = 0
         with self._queue_cv:
             if self._closed or rng in self._cache or rng in self._inflight:
                 return
-            self.stats.prefetch_issued += 1
             self._queue.append(rng)
+            while len(self._queue) > self._queue_max:
+                self._queue.popleft()  # shed the stalest hint first
+                dropped += 1
             self._queue_cv.notify()
+        self.stats.add(prefetch_issued=1, prefetch_dropped=dropped)
+        if dropped:
+            obs_metrics.REGISTRY.get().inc("backend.prefetch_dropped",
+                                           dropped)
 
     def _worker(self) -> None:
         # the worker must survive ANY per-item failure: prefetch is a hint,
@@ -289,8 +315,7 @@ class CachingBackend(FetchBackend):
                     rng = self._queue.popleft()
                 _, performed = self._fetch_into_cache(rng)
                 if performed:  # the prefetch itself moved the bytes
-                    with self._lock:
-                        self.stats.prefetch_useful += 1
+                    self.stats.add(prefetch_useful=1)
             except Exception:  # noqa: BLE001 - prefetch is best-effort
                 pass
 

@@ -42,6 +42,7 @@ from repro.core.retrieve import ProgressiveReader, SegmentSource
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
 from repro.store import layout as lo
+from repro.store import serving as sv
 from repro import tune as tn
 
 
@@ -139,7 +140,8 @@ class StoreVariableReader:
     def __init__(self, store: lo.DatasetStore, name: str,
                  backend: Optional[str] = None, incremental: bool = True,
                  depth: Optional[int] = None, mesh: shd.MeshLike = None,
-                 degrade: bool = False):
+                 degrade: bool = False,
+                 shared: Optional[sv.ServingTier] = None, tenant: int = 0):
         var = store.variable(name)
         self.var = var
         self.name = name
@@ -159,12 +161,18 @@ class StoreVariableReader:
         # else round-robin; mesh=None keeps every engine uncommitted
         self.sharded = shd.ShardedReconstructEngine(mesh, shards=var.shards)
         self.degrade = degrade
+        # shared=: the service's serving tier (plane cache + coalescing +
+        # cross-session batched decode).  Scope keys by (variable, chunk):
+        # every session of one service replays the same manifest plan, so
+        # decoded plane groups are exchangeable across its sessions.
         self.chunk_readers = [
             ProgressiveReader(lo.chunk_refactored(var, ci),
                               source=StoreSegmentSource(store, name, ci),
                               incremental=incremental,
                               device=self.sharded.device_for(ci),
-                              config=cfg, degrade=degrade)
+                              config=cfg, degrade=degrade,
+                              shared=shared, shared_scope=(name, ci),
+                              shared_tenant=tenant)
             for ci in range(len(var.chunks))]
         self.ref = _VarRef(var, self.chunk_readers)
         # assembled-variable cache, keyed on the fetch signature; per-chunk
@@ -292,6 +300,14 @@ def _warm_and_fetch(plans: List[Tuple[ProgressiveReader, List[int]]],
     def warm(i: int):
         r, target = plans[i]
         wants = r.pending_deltas(target)
+        if r.shared is not None:
+            # serving tier: warming a byte range whose DECODED group is
+            # already cached (or being decoded by another session) is pure
+            # waste — and would break the one-backend-read-per-group
+            # contract's accounting.  Empty pieces are never read at all.
+            wants = [d for d in wants
+                     if r.ref.pieces[d[0]].n > 0
+                     and r.shared.should_warm(r.shared_scope + d)]
         if wants and hasattr(r.source, "warm"):
             with obs_trace.span("serve.warm", chunk=i, groups=len(wants)):
                 r.source.warm(wants)
@@ -308,12 +324,29 @@ def _warm_and_fetch(plans: List[Tuple[ProgressiveReader, List[int]]],
 
 @dataclasses.dataclass
 class SessionStats:
+    """Per-session counters (thread-safe).  ``add`` applies a whole request's
+    deltas atomically and ``snapshot`` reads under the same lock, so a
+    snapshot taken mid-request never shows e.g. the request counted with its
+    bytes missing (the historical torn-read race)."""
     requests: int = 0
     bytes_fetched: int = 0
     qoi_iterations: int = 0
     # plane groups served WITHOUT their data under the degrade policy —
     # every one of these widened some returned bound
     degraded_groups: int = 0
+
+    def __post_init__(self):
+        self._lock = threading.Lock()
+
+    def add(self, **kw: int) -> None:
+        with self._lock:
+            for k, v in kw.items():
+                setattr(self, k, getattr(self, k) + v)
+
+    def snapshot(self) -> Dict[str, int]:
+        with self._lock:
+            return {f.name: getattr(self, f.name)
+                    for f in dataclasses.fields(self)}
 
 
 class Session:
@@ -335,7 +368,9 @@ class Session:
                                     incremental=self.service.incremental,
                                     depth=self.service.depth,
                                     mesh=self.service.mesh,
-                                    degrade=self.service.degrade)
+                                    degrade=self.service.degrade,
+                                    shared=self.service.tier,
+                                    tenant=self.sid)
             self._readers[var] = r
         return r
 
@@ -344,7 +379,7 @@ class Session:
         """Fold NEW degradation events since ``before`` into stats/metrics."""
         delta = sum(r.degraded_count for r in readers) - before
         if delta > 0:
-            self.stats.degraded_groups += delta
+            self.stats.add(degraded_groups=delta)
             obs_metrics.REGISTRY.get().inc("serve.degraded_groups", delta)
         return delta
 
@@ -360,8 +395,7 @@ class Session:
             r = self.reader(var)
             deg_before = r.degraded_count
             x, bound, fetched = r.retrieve(tol, relative=relative)
-        self.stats.requests += 1
-        self.stats.bytes_fetched += fetched
+        self.stats.add(requests=1, bytes_fetched=fetched)
         self._record_degraded([r], deg_before)
         m = obs_metrics.REGISTRY.get()
         m.inc("serve.requests")
@@ -377,10 +411,10 @@ class Session:
         before = sum(r.total_bytes_fetched for r in readers)
         deg_before = sum(r.degraded_count for r in readers)
         res = qq.progressive_qoi_retrieve(readers, q, tau, method=method, **kw)
-        self.stats.requests += 1
-        self.stats.qoi_iterations += res.iterations
-        self.stats.bytes_fetched += sum(
-            r.total_bytes_fetched for r in readers) - before
+        self.stats.add(
+            requests=1, qoi_iterations=res.iterations,
+            bytes_fetched=sum(r.total_bytes_fetched
+                              for r in readers) - before)
         self._record_degraded(readers, deg_before)
         return res
 
@@ -390,7 +424,10 @@ class RetrievalService:
 
     def __init__(self, store: lo.DatasetStore, backend: Optional[str] = None,
                  incremental: bool = True, depth: Optional[int] = None,
-                 mesh: shd.MeshLike = None, degrade: bool = False):
+                 mesh: shd.MeshLike = None, degrade: bool = False,
+                 serving: bool = True,
+                 plane_cache_bytes: Optional[int] = None,
+                 coalesce_window_s: float = sv.DEFAULT_WINDOW_S):
         self.store = store
         # None lets each variable reader replay its manifest plan (tuned
         # decode knobs); an explicit value overrides the plan for every var
@@ -403,6 +440,20 @@ class RetrievalService:
         # mesh-sharded serving: every session's variable readers place their
         # chunk engines across this mesh's devices (core.sharded)
         self.mesh = shd.resolve_mesh(mesh)
+        # the serving tier (docs/serving.md): shared plane cache + request
+        # coalescing + cross-session batched decode.  One tier per service —
+        # its sessions share manifest plans and mesh placement, which is
+        # what makes decoded plane groups exchangeable between them.
+        # ``plane_cache_bytes=0`` keeps coalescing but disables retention;
+        # ``serving=False`` turns the tier off entirely (fully private
+        # per-session decode).  The oracle path (incremental=False) is
+        # always private by construction.
+        self.tier = (sv.ServingTier(
+            cache_bytes=(sv.DEFAULT_PLANE_CACHE_BYTES
+                         if plane_cache_bytes is None
+                         else int(plane_cache_bytes)),
+            window_s=coalesce_window_s)
+            if serving and incremental else None)
         self._sessions: Dict[int, Session] = {}
         self._ids = itertools.count(1)
         self._lock = threading.Lock()
@@ -479,8 +530,7 @@ class RetrievalService:
                 x, bound = vr.reconstruct()  # drained: delta recompose only
                 fetched = (vr.total_bytes_fetched - ent["before"]) \
                     if first else 0
-                ent["session"].stats.requests += 1
-                ent["session"].stats.bytes_fetched += fetched
+                ent["session"].stats.add(requests=1, bytes_fetched=fetched)
                 if first:
                     ent["session"]._record_degraded([vr], ent["deg_before"])
                 results.append((x, bound, fetched))
@@ -496,10 +546,11 @@ class RetrievalService:
     def stats(self) -> Dict[str, object]:
         backend_stats = self.store.stats()
         with self._lock:
-            per_session = {s.sid: dataclasses.asdict(s.stats)
+            per_session = {s.sid: s.stats.snapshot()
                            for s in self._sessions.values()}
         return {
             "store_bytes": self.store.stored_bytes,
             "backend": backend_stats.snapshot() if backend_stats else None,
+            "serving": self.tier.snapshot() if self.tier else None,
             "sessions": per_session,
         }

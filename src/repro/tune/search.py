@@ -14,11 +14,11 @@
   3. run a handful of measured probe writes (``probes`` best-scored
      candidates, the hard-coded default ALWAYS included) through the real
      ``refactor_array`` fused path, calibrate the model's scale from the
-     default's probe, then probe-search ``dispatch_ahead`` by running the
-     best-measured program config through the real chunked pipeline at
-     every candidate window depth (a scheduling knob the program's HLO
-     cannot see — only a multi-chunk pipelined run exercises the async
-     per-device drains it controls);
+     default's probe, then probe-search the pure-scheduling knobs the
+     program's HLO cannot see: ``dispatch_ahead`` through the real chunked
+     pipelined WRITE (async per-device drain windows) and the read-side
+     ``depth`` through the real chunked pipelined READ of the winner's own
+     blobs (overlap look-ahead + per-device drain window);
   4. cache the measured winner keyed by backend fingerprint.
 
 The measured-best-of-probes rule keeps the tuner safe: the default config is
@@ -46,6 +46,7 @@ DESIGNS = ("register_block", "locality", "shuffle")
 GROUP_SIZES = (2, 4, 8)
 TILES = (4, 8, 16)
 DISPATCH_AHEAD = (1, 2, 4)
+DEPTHS = (1, 2, 4)  # read-side overlap look-ahead / drain window
 
 
 @dataclasses.dataclass
@@ -163,6 +164,87 @@ def _measure_pipeline_write(x: np.ndarray, cfg: RefactorConfig,
     return best
 
 
+def _measure_pipeline_read(blobs: Sequence[bytes], cfg: RefactorConfig,
+                           tol: float, repeats: int = 2) -> float:
+    """Measured seconds for a multi-chunk PIPELINED read with ``cfg`` — the
+    probe that actually sees ``depth`` (the overlap feeder's look-ahead AND
+    the per-device drain window), which no single-chunk program probe can.
+    A fresh pipeline per run: incremental readers are stateful, so reusing
+    one would time the engine cache, not the decode.  Compile excluded: one
+    warmup, then best-of-``repeats``."""
+    from repro.core import pipeline as pl
+
+    def once() -> float:
+        t0 = time.perf_counter()
+        pipe = pl.ChunkedReconstructPipeline(pipelined=True, config=cfg)
+        pipe.reconstruct(blobs, tol)
+        return time.perf_counter() - t0
+
+    once()
+    best = min(once() for _ in range(max(repeats, 1)))
+    STATS.add(probes_run=1)
+    return best
+
+
+def _probe_blobs(best: RefactorConfig, n: int, levels: Optional[int],
+                 dtype: str, n_chunks: int
+                 ) -> Tuple[np.ndarray, List[bytes]]:
+    """Refactor the read probe's data once with the winning config: the
+    serialized chunk blobs every depth candidate reconstructs from."""
+    from repro.core import pipeline as pl
+
+    x = _probe_chunk((n_chunks * n,), dtype)
+    blobs = pl.ChunkedRefactorPipeline(
+        levels=levels, pipelined=True, config=best.replace(chunk_elems=n),
+        use_tune_cache=False).refactor(x)
+    return x, blobs
+
+
+def _tune_read_depth(best: RefactorConfig, shape: Sequence[int],
+                     dtype: str, levels: Optional[int],
+                     n_chunks: int = 6
+                     ) -> Tuple[RefactorConfig,
+                                List[Tuple[RefactorConfig, float]]]:
+    """Probe-search the read-side overlap ``depth`` through the real
+    pipelined read path.
+
+    Like ``dispatch_ahead`` on the write side, ``depth`` is pure scheduling
+    (the reconstruction is bit-identical at any depth), so the HLO model is
+    blind to it: refactor the probe data ONCE with the winning config, then
+    reconstruct the same blobs at every candidate depth and keep the fastest
+    measured one.  The adopted depth is recorded in the winner (and thus in
+    the manifest ``plan``), so store readers replay it via
+    ``VariableEntry.plan`` exactly as they replay the kernel tiling.
+    Returns (winner, [(cfg, seconds) per depth probed])."""
+    n = int(np.prod(shape, dtype=np.int64)) if len(shape) else 1
+    fallback = (best if best.depth in DEPTHS
+                else best.replace(depth=DEPTHS[1]))
+    if n == 0:
+        return fallback, []
+    if levels is None:
+        from repro.core import decompose as dc
+        levels = dc.num_levels((n,))
+    try:
+        x, blobs = _probe_blobs(best, n, levels, dtype, n_chunks)
+    except Exception:
+        return fallback, []
+    # mid-curve tolerance: deep enough that every chunk fetches several
+    # plane groups (the staged-drain schedule depth actually controls)
+    tol = 1e-3 * float(np.ptp(x)) if np.ptp(x) > 0 else 1e-3
+    timed: List[Tuple[RefactorConfig, float]] = []
+    for dp in DEPTHS:
+        cfg = best.replace(depth=dp, chunk_elems=n)
+        try:
+            timed.append((cfg, _measure_pipeline_read(blobs, cfg, tol)))
+        except Exception:
+            continue
+    if not timed:
+        return fallback, []
+    dp = min(timed, key=lambda cs: cs[1])[0].depth
+    # probe chunking stays out of the winner: only the depth is adopted
+    return best.replace(depth=dp), timed
+
+
 def _tune_dispatch_ahead(best_prog: RefactorConfig, shape: Sequence[int],
                          dtype: str, levels: Optional[int],
                          n_chunks: int = 6
@@ -269,10 +351,15 @@ def tune(shape: Sequence[int], dtype: str = "float32",
     if np.isfinite(min(s for _, s in measured)):
         best, da_probes = _tune_dispatch_ahead(best_prog, shape, dtype,
                                                levels)
+        # read-side scheduling twin: probe `depth` through the real
+        # pipelined read of the winner's own blobs (bit-identical at any
+        # depth — only wall clock distinguishes the candidates)
+        best, depth_probes = _tune_read_depth(best, shape, dtype, levels)
     else:
         best = (best_prog if best_prog.dispatch_ahead in DISPATCH_AHEAD
                 else best_prog.replace(dispatch_ahead=DISPATCH_AHEAD[1]))
         da_probes = []
+        depth_probes = []
 
     tcache.store(
         fp, problem, best,
@@ -280,6 +367,7 @@ def tune(shape: Sequence[int], dtype: str = "float32",
               "probes": [[c.to_json(), s] for c, s in measured],
               "dispatch_probes": [[c.dispatch_ahead, s]
                                   for c, s in da_probes],
+              "depth_probes": [[c.depth, s] for c, s in depth_probes],
               "model_scale": model.scale,
               "n_candidates": len(cands)},
         root=cache_root)

@@ -332,7 +332,10 @@ def test_backend_stats_cached_reread_and_service_stats(tmp_path):
     root, entry = _write_store(tmp_path, x)
     store = DatasetStore.open(
         root, backend=CachingBackend(LocalFileBackend(root)))
-    svc = RetrievalService(store)
+    # serving=False: the subject is the BYTE cache's hit accounting; the
+    # serving tier's plane cache would serve session 2 without any backend
+    # reads at all (tests/test_serving.py covers that layer)
+    svc = RetrievalService(store, serving=False)
     tol = 1e-3 * float(x.max() - x.min())
 
     s1 = svc.open_session()

@@ -1,0 +1,502 @@
+"""Serving tier: shared plane cache, request coalescing, cross-session
+batched decode, bounded prefetch queue, and stats-snapshot consistency.
+
+The load-bearing contracts:
+
+  * N concurrent sessions retrieving the same prefix issue exactly ONE
+    backend read and ONE shared decode per plane group, and every session's
+    reconstruction is byte-identical to the uncached single-session oracle;
+  * an owner's fetch error propagates to every coalesced waiter (each
+    applies its own degrade policy, per-session accounting) and is NEVER
+    cached — the next requester retries fresh;
+  * the plane cache admits by popularity (a cold scan cannot flush the hot
+    set) and counts evictions/admission-rejects;
+  * per-tenant fairness: one heavy session's backlog cannot monopolize a
+    decode round;
+  * SessionStats/BackendStats snapshots are internally consistent under
+    concurrent mutation (the torn-read hammer);
+  * session lifecycle across >= 8 threads with the chaos backend: no leaked
+    sessions, no cross-session state bleed.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import qoi as qq
+from repro.data.fields import gaussian_field
+from repro.store import (CachingBackend, DatasetStore, DatasetWriter,
+                         LocalFileBackend, RetrievalService, ServingTier)
+from repro.store import backend as bk
+from repro.store import reliability as rl
+from repro.store import serving as sv
+from repro.store.service import SessionStats
+
+
+@pytest.fixture(scope="module")
+def field():
+    return gaussian_field((24, 24, 24), slope=-2.2, seed=7)
+
+
+@pytest.fixture(scope="module")
+def store_dir(tmp_path_factory, field):
+    root = str(tmp_path_factory.mktemp("serving_store"))
+    with DatasetWriter(root, chunk_elems=4000) as w:
+        w.write("v", field)
+    return root
+
+
+@pytest.fixture(scope="module")
+def oracle(store_dir):
+    """Uncached single-session reference results per tolerance."""
+    svc = RetrievalService(DatasetStore.open(store_dir), serving=False)
+    out = {}
+    for tol in (1e-2, 1e-3, 1e-4):
+        # fresh session per tolerance: ``fetched`` is the full from-scratch
+        # plan cost, comparable with cold sessions in the tests
+        out[tol] = svc.open_session().retrieve("v", tol)
+    return out
+
+
+# -------------------------------------------------- coalescing correctness --
+
+def test_concurrent_sessions_one_read_one_decode(store_dir, oracle):
+    """The acceptance counter-test: N sessions, same tolerance, launched
+    through a barrier — exactly one backend read and one shared decode per
+    distinct plane group, all reconstructions byte-identical to the
+    oracle."""
+    backend = CachingBackend(LocalFileBackend(store_dir))
+    store = DatasetStore.open(store_dir, backend=backend)
+    svc = RetrievalService(store)
+    N = 6
+    tol = 1e-3
+    sessions = [svc.open_session() for _ in range(N)]
+    outs = [None] * N
+    barrier = threading.Barrier(N)
+
+    def run(k):
+        barrier.wait()
+        outs[k] = sessions[k].retrieve("v", tol)
+
+    ts = [threading.Thread(target=run, args=(k,)) for k in range(N)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join(timeout=300)
+    assert all(o is not None for o in outs), "a session hung"
+
+    ox, ob, of = oracle[tol]
+    for k, (xk, bound, fetched) in enumerate(outs):
+        np.testing.assert_array_equal(xk, ox, err_msg=f"session {k}")
+        assert bound == ob
+        # logical accounting: every session paid the same plan bytes,
+        # regardless of where the decode actually ran
+        assert fetched == of
+
+    snap = svc.stats()
+    tier, be = snap["serving"], snap["backend"]
+    # each claim resolved exactly one way, and the tier decoded each
+    # distinct group exactly once: everything else was a hit or coalesced
+    assert tier["requests"] == N * tier["decoded"]
+    assert tier["plane_hits"] + tier["coalesced"] + tier["decoded"] \
+        == tier["requests"]
+    assert tier["coalesced"] + tier["plane_hits"] > 0
+    # exactly one backend fetch per decoded group (+1: the manifest read)
+    assert be["fetches"] == tier["decoded"] + 1
+    assert tier["errors_propagated"] == 0
+
+
+def test_tolerance_tightening_across_sessions_matches_oracle(store_dir,
+                                                             oracle):
+    """Interleaved tightening schedules across sessions: every intermediate
+    state byte-identical to the oracle, later sessions ride the cache."""
+    svc = RetrievalService(DatasetStore.open(store_dir))
+    a, b = svc.open_session(), svc.open_session()
+    for s, tol in [(a, 1e-2), (b, 1e-3), (a, 1e-4), (b, 1e-4), (a, 1e-4)]:
+        x, bound, _ = s.retrieve("v", tol)
+        np.testing.assert_array_equal(x, oracle[tol][0])
+        assert bound == oracle[tol][1]
+    tier = svc.stats()["serving"]
+    assert tier["plane_hits"] > 0            # b's groups served from cache
+    assert tier["decoded"] < tier["requests"]
+
+
+def test_cache_disabled_keeps_coalescing(store_dir, oracle):
+    """plane_cache_bytes=0: no retention (second pass decodes again), but
+    claims still dedupe and results stay byte-identical."""
+    svc = RetrievalService(DatasetStore.open(store_dir),
+                           plane_cache_bytes=0)
+    a = svc.open_session()
+    b = svc.open_session()
+    xa, _, _ = a.retrieve("v", 1e-3)
+    xb, _, _ = b.retrieve("v", 1e-3)
+    np.testing.assert_array_equal(xa, oracle[1e-3][0])
+    np.testing.assert_array_equal(xb, oracle[1e-3][0])
+    tier = svc.stats()["serving"]
+    assert tier["plane_hits"] == 0 and tier["admitted"] == 0
+    assert tier["decoded"] == tier["requests"]  # sequential: no coalescing
+
+
+def test_qoi_concurrent_sessions_share_tier(store_dir, field):
+    """QoI retrieval through the tier: concurrent sessions converge and the
+    result matches the tolerance the QoI loop negotiated."""
+    svc = RetrievalService(DatasetStore.open(store_dir))
+    res = [None, None]
+
+    def run(k):
+        s = svc.open_session()
+        res[k] = s.retrieve_qoi(["v"], qq.V_TOTAL, 1e-2)
+
+    ts = [threading.Thread(target=run, args=(k,)) for k in range(2)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join(timeout=300)
+    assert res[0] is not None and res[1] is not None
+    assert res[0].converged and res[1].converged
+    np.testing.assert_array_equal(res[0].values[0], res[1].values[0])
+
+
+# ------------------------------------------------------- error propagation --
+
+class _RangeFaultBackend(bk.FetchBackend):
+    """Fails reads of registered byte ranges until ``heal()`` — the
+    deterministic double for a persistently unreachable segment."""
+
+    def __init__(self, inner: bk.FetchBackend):
+        self.inner = inner
+        self.failing: set = set()
+        self.fail_reads = 0
+
+    def fail_range(self, offset: int, size: int) -> None:
+        self.failing.add((offset, size))
+
+    def heal(self) -> None:
+        self.failing.clear()
+
+    def read(self, key: str, offset: int, size: int) -> bytes:
+        if (offset, size) in self.failing:
+            self.fail_reads += 1
+            raise rl.TransientFetchError(f"injected: {key}@{offset}+{size}")
+        return self.inner.read(key, offset, size)
+
+    def size(self, key: str) -> int:
+        return self.inner.size(key)
+
+    def close(self) -> None:
+        self.inner.close()
+
+
+def test_error_propagates_to_all_waiters_never_cached(store_dir, oracle):
+    """An owner's typed store failure reaches every coalesced session (each
+    degrades under its OWN policy, with per-session accounting), nothing is
+    cached for the failed key, and a later session retries fresh after the
+    fault clears."""
+    faulty = _RangeFaultBackend(LocalFileBackend(store_dir))
+    store = DatasetStore.open(store_dir,
+                              backend=CachingBackend(faulty))
+    # fail one plane group that a 1e-3 plan certainly wants: chunk 0,
+    # piece 1, group 0 (the cold set fetches group 0 of every piece)
+    ref = store.variable("v").chunks[0].pieces[1].groups[0]
+    faulty.fail_range(ref.offset, ref.size)
+
+    svc = RetrievalService(store, degrade=True)
+    N = 4
+    sessions = [svc.open_session() for _ in range(N)]
+    outs = [None] * N
+    barrier = threading.Barrier(N)
+
+    def run(k):
+        barrier.wait()
+        outs[k] = sessions[k].retrieve("v", 1e-3)
+
+    ts = [threading.Thread(target=run, args=(k,)) for k in range(N)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join(timeout=300)
+    assert all(o is not None for o in outs)
+
+    ox, ob, _ = oracle[1e-3]
+    for k, (xk, bound, _) in enumerate(outs):
+        # every session degraded the SAME piece: served without the group,
+        # bound honestly widened past the oracle's
+        assert bound > ob
+        assert not np.array_equal(xk, ox)
+    stats = svc.stats()
+    # per-session accounting: each session recorded its own degradation
+    for sid, st in stats["sessions"].items():
+        assert st["degraded_groups"] >= 1, (sid, st)
+    # the failure is never admitted to the plane cache
+    assert stats["serving"]["plane_cache"]["entries"] \
+        == stats["serving"]["admitted"]
+    assert svc.tier.inflight_count == 0      # no wedged claims
+
+    # fault clears: a FRESH session must get the exact result (the error
+    # was propagated, not cached)
+    faulty.heal()
+    s = svc.open_session()
+    x, bound, _ = s.retrieve("v", 1e-3)
+    np.testing.assert_array_equal(x, ox)
+    assert bound == ob
+    assert svc.stats()["sessions"][s.sid]["degraded_groups"] == 0
+
+
+def test_tier_fail_unit_semantics():
+    """Claim-table unit contract: fail() resolves every coalesced waiter
+    with the same error, and the key is immediately claimable again."""
+    tier = ServingTier(window_s=0.0)
+    key = ("v", 0, 1, 2)
+    (kind, fut), = tier.claim(1, [key]).values()
+    assert kind == "mine"
+    (kind2, fut2), = tier.claim(2, [key]).values()
+    assert kind2 == "theirs" and fut2 is fut
+
+    got = {}
+
+    def waiter():
+        try:
+            tier.wait_for(fut2)
+        except Exception as exc:  # noqa: BLE001
+            got["exc"] = exc
+
+    t = threading.Thread(target=waiter)
+    t.start()
+    boom = rl.TransientFetchError("boom")
+    tier.fail(key, boom)
+    t.join(timeout=30)
+    assert got["exc"] is boom
+    # never cached; the next claimant owns a fresh attempt
+    (kind3, _), = tier.claim(3, [key]).values()
+    assert kind3 == "mine"
+    assert tier.stats.snapshot()["errors_propagated"] == 1
+
+
+def test_abandon_withdraws_queued_jobs():
+    """abandon() fails claimed keys AND withdraws their queued decode jobs,
+    so no thread decodes work nobody will consume."""
+    tier = ServingTier(window_s=0.0)
+    key = ("v", 0, 0, 0)
+    (_, fut), = tier.claim(7, [key]).values()
+    job = sv.DecodeJob(key=key, kind="group",
+                       rows=np.zeros((2, 4), np.uint32), row_offset=0,
+                       n=128, mag_bits=30, design="register_block",
+                       backend="auto", tiles_per_block=8, unroll="naive",
+                       device=None, future=fut)
+    tier.submit(7, [job])
+    tier.abandon(7, [key], RuntimeError("unwinding"))
+    assert fut.done and isinstance(fut.error, RuntimeError)
+    with tier._lock:
+        assert not tier._queued()
+    assert tier.inflight_count == 0
+
+
+# ------------------------------------------------------------- plane cache --
+
+def _planes(n_words: int) -> sv.DecodedPlanes:
+    return sv.DecodedPlanes(array=np.zeros((n_words,), np.uint32),
+                            kind="group", n_rows=1, row_bytes=4 * n_words)
+
+
+def test_plane_cache_lru_eviction_and_bytes():
+    c = sv.PlaneCache(capacity_bytes=100)          # 25 uint32 elements
+    for k in ("a", "b"):
+        c.touch((k, 0, 0, 0))
+        assert c.offer((k, 0, 0, 0), _planes(10))[0]
+    assert c.cached_bytes == 80 and len(c) == 2
+    # same-popularity insert evicts the LRU head
+    c.touch(("c", 0, 0, 0))
+    admitted, evictions, rejects = c.offer(("c", 0, 0, 0), _planes(10))
+    assert admitted and evictions == 1 and rejects == 0
+    assert c.get(("a", 0, 0, 0)) is None           # a was LRU
+    assert c.get(("b", 0, 0, 0)) is not None
+
+
+def test_plane_cache_popularity_guards_hot_set():
+    """TinyLFU-style admission: a one-hit-wonder cannot evict an entry more
+    popular than itself — the cold scan bounces off the hot set."""
+    c = sv.PlaneCache(capacity_bytes=80)           # room for two entries
+    hot = ("hot", 0, 0, 0)
+    for _ in range(10):
+        c.touch(hot)
+    assert c.offer(hot, _planes(10))[0]
+    warm = ("warm", 0, 0, 0)
+    c.touch(warm)
+    assert c.offer(warm, _planes(10))[0]
+    c.get(warm)   # LRU order now: hot, warm — hot is the eviction victim
+    cold = ("cold", 0, 0, 0)
+    c.touch(cold)
+    admitted, evictions, rejects = c.offer(cold, _planes(10))
+    assert not admitted and rejects == 1 and evictions in (0, 1)
+    assert c.get(hot) is not None                  # hot set survived
+    assert c.get(cold) is None
+
+
+def test_plane_cache_oversized_candidate_rejected():
+    c = sv.PlaneCache(capacity_bytes=30)
+    big = ("big", 0, 0, 0)
+    c.touch(big)
+    admitted, _, rejects = c.offer(big, _planes(100))   # 400 bytes > cap
+    assert not admitted and rejects == 1
+    assert len(c) == 0 and c.cached_bytes == 0
+
+
+# ---------------------------------------------------------------- fairness --
+
+def test_fair_batch_round_robins_tenants():
+    """A heavy tenant's backlog cannot monopolize a decode round: the batch
+    interleaves every tenant's queue and overflow waits."""
+    tier = ServingTier(window_s=0.0, max_batch_jobs=4)
+
+    def job(tenant, i):
+        key = (f"t{tenant}", 0, 0, i)
+        (_, fut), = tier.claim(tenant, [key]).values()
+        return sv.DecodeJob(key=key, kind="group",
+                            rows=np.zeros((1, 4), np.uint32), row_offset=0,
+                            n=64, mag_bits=30, design="register_block",
+                            backend="auto", tiles_per_block=8,
+                            unroll="naive", device=None, future=fut)
+
+    tier.submit(1, [job(1, i) for i in range(10)])   # heavy
+    tier.submit(2, [job(2, i) for i in range(2)])    # light
+    with tier._lock:
+        batch = tier._take_fair_batch()
+    owners = [j.key[0] for j in batch]
+    assert owners == ["t1", "t2", "t1", "t2"]        # strict interleave
+    with tier._lock:
+        rest = tier._take_fair_batch()
+    assert [j.key[0] for j in rest] == ["t1"] * 4    # overflow next round
+
+
+# -------------------------------------------------- bounded prefetch queue --
+
+def test_prefetch_queue_bounded_drops_oldest():
+    """A prefetch storm cannot grow the queue without limit: the stalest
+    hints are shed first and counted (stats + obs metric)."""
+    gate = threading.Event()
+
+    class _Slow(bk.FetchBackend):
+        def read(self, key, offset, size):
+            gate.wait(timeout=30)
+            return b"\0" * size
+
+        def size(self, key):
+            return 1 << 20
+
+    be = CachingBackend(_Slow(), workers=1, prefetch_queue_max=4)
+    try:
+        for i in range(20):
+            be.prefetch("k", i * 10, 10)
+        snap = be.stats.snapshot()
+        assert snap["prefetch_issued"] == 20
+        assert snap["prefetch_dropped"] >= 14     # 20 - worker(1) - queue(4)
+        with be._lock:
+            assert len(be._queue) <= 4
+    finally:
+        gate.set()
+        be.close()
+
+
+# ----------------------------------------------------- stats snapshot race --
+
+def test_session_stats_snapshot_hammer():
+    """Snapshots taken mid-update are internally consistent: every add() is
+    atomic, so bytes_fetched == 7 * requests in EVERY observed snapshot."""
+    st = SessionStats()
+    stop = threading.Event()
+    bad = []
+
+    def writer():
+        while not stop.is_set():
+            st.add(requests=1, bytes_fetched=7, qoi_iterations=2)
+
+    def reader():
+        while not stop.is_set():
+            s = st.snapshot()
+            if s["bytes_fetched"] != 7 * s["requests"] \
+                    or s["qoi_iterations"] != 2 * s["requests"]:
+                bad.append(s)
+
+    ts = [threading.Thread(target=writer) for _ in range(4)] \
+        + [threading.Thread(target=reader) for _ in range(2)]
+    for t in ts:
+        t.start()
+    import time
+    time.sleep(0.5)
+    stop.set()
+    for t in ts:
+        t.join(timeout=30)
+    assert not bad, bad[:3]
+    final = st.snapshot()
+    assert final["bytes_fetched"] == 7 * final["requests"]
+
+
+def test_backend_stats_snapshot_hammer():
+    st = bk.BackendStats()
+    stop = threading.Event()
+    bad = []
+
+    def writer():
+        while not stop.is_set():
+            st.add(reads=1, bytes_served=13, cache_hits=1)
+
+    def reader():
+        while not stop.is_set():
+            s = st.snapshot()
+            if s["bytes_served"] != 13 * s["reads"] \
+                    or s["cache_hits"] != s["reads"]:
+                bad.append(s)
+
+    ts = [threading.Thread(target=writer) for _ in range(4)] \
+        + [threading.Thread(target=reader) for _ in range(2)]
+    for t in ts:
+        t.start()
+    import time
+    time.sleep(0.5)
+    stop.set()
+    for t in ts:
+        t.join(timeout=30)
+    assert not bad, bad[:3]
+
+
+# ----------------------------------------------------- lifecycle under chaos --
+
+def test_session_lifecycle_concurrent_chaos(store_dir, oracle, monkeypatch):
+    """Create/retrieve/close across 8 threads with the chaos backend wired
+    in (REPRO_CHAOS): every result byte-identical to the oracle through
+    retries, no leaked sessions, no cross-session bleed, and degraded
+    accounting stays zero (transient faults are retried, not degraded)."""
+    monkeypatch.setenv("REPRO_CHAOS", "transient=0.05,seed=97")
+    store = DatasetStore.open(store_dir)   # default backend: chaos-wrapped
+    svc = RetrievalService(store)
+    N = 8
+    errors = []
+    barrier = threading.Barrier(N)
+
+    def run(k):
+        barrier.wait()
+        try:
+            for tol in (1e-2, 1e-3):
+                s = svc.open_session()
+                try:
+                    x, bound, _ = s.retrieve("v", tol)
+                    ox, ob, _ = oracle[tol]
+                    if not np.array_equal(x, ox):
+                        errors.append((k, tol, "bytes"))
+                    if bound != ob:
+                        errors.append((k, tol, "bound"))
+                    if s.stats.snapshot()["degraded_groups"] != 0:
+                        errors.append((k, tol, "degraded"))
+                finally:
+                    svc.close_session(s)
+        except Exception as exc:  # noqa: BLE001
+            errors.append((k, repr(exc)))
+
+    ts = [threading.Thread(target=run, args=(k,)) for k in range(N)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join(timeout=600)
+    assert not errors, errors[:5]
+    assert svc.sessions == []              # every session closed: no leaks
+    assert svc.tier.inflight_count == 0    # no wedged claims

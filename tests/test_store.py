@@ -74,7 +74,9 @@ def test_cold_incremental_tolerance_sequence(store_dir, field):
 def test_backend_cache_accounting(store_dir):
     backend = CachingBackend(LocalFileBackend(store_dir))
     store = DatasetStore.open(store_dir, backend=backend)
-    svc = RetrievalService(store)
+    # serving=False: the subject here is the BYTE cache; the plane cache
+    # above it would serve repeat sessions without touching the backend
+    svc = RetrievalService(store, serving=False)
     svc.open_session().retrieve("v", 1e-3)
     cold = backend.stats.bytes_fetched
     assert cold > 0 and backend.stats.cache_misses > 0

@@ -266,7 +266,8 @@ class _FakeModel:
         return self.scale
 
 
-def _patch_tuner(monkeypatch, measure, pipeline_measure=None):
+def _patch_tuner(monkeypatch, measure, pipeline_measure=None,
+                 read_measure=None):
     monkeypatch.setattr(tsearch, "CostModel", _FakeModel)
     monkeypatch.setattr(tsearch, "_measure_write", measure)
     # the dispatch_ahead probe runs real multi-chunk pipelined writes;
@@ -278,6 +279,18 @@ def _patch_tuner(monkeypatch, measure, pipeline_measure=None):
         else (lambda x, cfg, levels, repeats=2:
               0.5 if cfg.dispatch_ahead == DEFAULT_CONFIG.dispatch_ahead
               else 1.0))
+    # likewise the read-depth probe (real pipelined write + reads): stub
+    # both the blob production and the measured reconstruct
+    monkeypatch.setattr(
+        tsearch, "_probe_blobs",
+        lambda best, n, levels, dtype, n_chunks:
+        (np.linspace(0.0, 1.0, n_chunks * n, dtype=np.float32),
+         [b"blob"] * n_chunks))
+    monkeypatch.setattr(
+        tsearch, "_measure_pipeline_read",
+        read_measure if read_measure is not None
+        else (lambda blobs, cfg, tol, repeats=2:
+              0.5 if cfg.depth == DEFAULT_CONFIG.depth else 1.0))
 
 
 def test_tune_measured_best_wins_then_cache_hit(tmp_path, monkeypatch):
@@ -374,6 +387,36 @@ def test_tune_probes_dispatch_ahead_through_pipeline(tmp_path, monkeypatch):
     assert r.config.chunk_elems == DEFAULT_CONFIG.chunk_elems
     # the depth survives the cache round-trip
     assert tn.tune((1024,), levels=2).config.dispatch_ahead == 2
+
+
+def test_tune_probes_read_depth_through_pipeline(tmp_path, monkeypatch):
+    """The read-side ``depth`` knob (ROADMAP gap from PR 8) is picked by
+    MEASURED pipelined reconstructs of the winner's own probe blobs — one
+    per candidate depth — recorded in the winner (and thus the manifest
+    plan), with the probe chunking never leaking into the cached config."""
+    _isolate(tmp_path, monkeypatch)
+    seen = []
+
+    def rmeasure(blobs, cfg, tol, repeats=2):
+        seen.append((cfg.depth, cfg.chunk_elems, len(blobs)))
+        return {1: 0.8, 2: 0.9, 4: 0.1}[cfg.depth]
+
+    _patch_tuner(monkeypatch, lambda x, cfg, levels, repeats=2: 1.0,
+                 read_measure=rmeasure)
+    r = tn.tune((1024,), levels=2, probes=1)
+    assert r.config.depth == 4           # fastest measured depth wins
+    assert [d for d, _, _ in seen] == list(tsearch.DEPTHS)
+    assert all(ce == 1024 and nb == 6 for _, ce, nb in seen)
+    assert r.config.chunk_elems == DEFAULT_CONFIG.chunk_elems
+    # the depth survives the cache round-trip (what store readers replay
+    # from the manifest plan)
+    assert tn.tune((1024,), levels=2).config.depth == 4
+    # and the cache file records the per-depth probe curve
+    p = tcache._path(tcache.cache_root(),
+                     tcache.backend_fingerprint("auto", 1),
+                     tcache.problem_key((1024,), "float32", 2))
+    meta = json.loads(p.read_text())["meta"]
+    assert [d for d, _ in meta["depth_probes"]] == list(tsearch.DEPTHS)
 
 
 def test_platform_peaks_calibrated_from_roofline_artifact(tmp_path,
